@@ -1,0 +1,49 @@
+"""MLOps-lifecycle benchmark (paper §4 operations, no figure — table in text):
+artifact publish / fetch / install / activate / rollback latencies on a
+registry with all three quant variants."""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import List
+
+import jax
+
+from repro import configs as C
+from repro.core.quant import QuantConfig, quantize_tree
+from repro.fleet import ArtifactRegistry, DeviceProfile, EdgeAgent
+from repro.models import init_params
+
+
+def run() -> List[str]:
+    cfg = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    qp, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
+    lines = []
+    with tempfile.TemporaryDirectory() as root:
+        reg = ArtifactRegistry(root)
+
+        t0 = time.perf_counter()
+        ref_fp = reg.publish("m", "v1", params, cfg, "fp32")
+        lines.append(f"lifecycle_publish_fp32,{(time.perf_counter()-t0)*1e6:.0f},"
+                     f"size={ref_fp.size_bytes}")
+        t0 = time.perf_counter()
+        ref_q = reg.publish("m", "v2", qp, cfg, "dynamic_int8")
+        lines.append(f"lifecycle_publish_int8,{(time.perf_counter()-t0)*1e6:.0f},"
+                     f"size={ref_q.size_bytes}")
+
+        agent = EdgeAgent("bench-dev", reg, DeviceProfile(memory_bytes=10**10))
+        t0 = time.perf_counter()
+        agent.install(ref_fp)
+        lines.append(f"lifecycle_install,{(time.perf_counter()-t0)*1e6:.0f},"
+                     f"sha_verified=True")
+        t0 = time.perf_counter()
+        agent.activate(ref_fp)
+        lines.append(f"lifecycle_activate,{(time.perf_counter()-t0)*1e6:.0f},"
+                     f"jit_session_built=True")
+        agent.activate(ref_q)
+        t0 = time.perf_counter()
+        agent.rollback()
+        lines.append(f"lifecycle_rollback,{(time.perf_counter()-t0)*1e6:.0f},"
+                     f"active={agent.active.variant}")
+    return lines

@@ -1,0 +1,95 @@
+"""Paper §5 reproduction: FP32 vs Signed-int8-Static vs Signed-int8-Dynamic.
+
+Three tables, one per paper figure/claim:
+  fig6a: average inference time per variant (CPU host = the Pi-4 stand-in)
+  fig6b: latency distribution (p10/p50/p90) per variant
+  text:  model-size reduction (~4x) and accuracy delta ("small degradation")
+
+Run via ``python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.core.quant import (CalibrationSession, QuantConfig, quantize_tree,
+                              tree_size_bytes)
+from repro.models import forward, init_params
+
+BENCH_ARCH = "stablelm-1.6b"
+
+
+def _cfg():
+    # the Pi-4-scale benchmark model (stablelm family, reduced to CPU scale)
+    return C.smoke_config(BENCH_ARCH).with_overrides(
+        dtype="float32", d_model=256, n_layers=4, d_ff=768, vocab_size=2048)
+
+
+def _batch(cfg, seed=0, b=4, s=128):
+    return {"tokens": jax.random.randint(jax.random.PRNGKey(seed), (b, s),
+                                         0, cfg.vocab_size)}
+
+
+def build_variants(cfg, params):
+    out = {"fp32": params}
+    qp_dyn, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
+    out["int8_dynamic"] = qp_dyn
+    qc = QuantConfig("static_int8", min_size=1024)
+    sess = CalibrationSession(params, qc)
+    for i in range(3):
+        jax.block_until_ready(
+            forward(sess.instrumented_params, _batch(cfg, 100 + i), cfg)[0])
+    qp_st, _ = quantize_tree(params, qc, sess.act_scales())
+    out["int8_static"] = qp_st
+    return out
+
+
+def run(iters: int = 10) -> List[str]:
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    variants = build_variants(cfg, params)
+    lines = []
+
+    lat: Dict[str, List[float]] = {}
+    logits: Dict[str, jax.Array] = {}
+    probe = _batch(cfg, 7)
+    for name, p in variants.items():
+        fwd = jax.jit(lambda pp, bb: forward(pp, bb, cfg)[0])
+        logits[name] = jax.block_until_ready(fwd(p, probe))     # warm + probe
+        ts = []
+        for i in range(iters):
+            b = _batch(cfg, i)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fwd(p, b))
+            ts.append((time.perf_counter() - t0) * 1e6)
+        lat[name] = sorted(ts)
+
+    # fig6a: average inference time
+    for name, ts in lat.items():
+        mean_us = sum(ts) / len(ts)
+        lines.append(f"quant_fig6a_{name},{mean_us:.0f},"
+                     f"speedup_vs_fp32={sum(lat['fp32'])/len(lat['fp32'])/mean_us:.2f}x")
+    # fig6b: distribution
+    for name, ts in lat.items():
+        lines.append(
+            f"quant_fig6b_{name},{ts[len(ts)//2]:.0f},"
+            f"p10={ts[len(ts)//10]:.0f}us p90={ts[9*len(ts)//10]:.0f}us")
+    # size table
+    base = tree_size_bytes(variants["fp32"])
+    for name, p in variants.items():
+        sz = tree_size_bytes(p)
+        lines.append(f"quant_size_{name},{sz},reduction={base/sz:.2f}x")
+    # accuracy proxy: top-1 agreement + logit cosine vs fp32
+    ref = logits["fp32"]
+    for name in ("int8_static", "int8_dynamic"):
+        l = logits[name]
+        top1 = float(jnp.mean(jnp.argmax(l, -1) == jnp.argmax(ref, -1)))
+        cos = float(jnp.sum(l * ref) /
+                    (jnp.linalg.norm(l) * jnp.linalg.norm(ref)))
+        lines.append(f"quant_accuracy_{name},{top1*100:.1f},"
+                     f"top1_agreement_pct cosine={cos:.5f}")
+    return lines

@@ -1,0 +1,65 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and emits, per (arch x shape x mesh):
+compute/memory/collective terms (seconds), the dominant term, HBM fit, and
+MODEL_FLOPS / HLO_FLOPS (useful-compute ratio).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        if path.endswith(".FAILED.json"):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def fmt_row(r: Dict) -> str:
+    t = r["roofline"]
+    mem_gb = r["memory"]["peak_est_bytes"] / 1e9
+    fits = "Y" if r["memory"]["peak_est_bytes"] <= r["memory"]["hbm_per_chip"] else "N"
+    return (f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:12.4f} {t['dominant'][:-2]:>10s} "
+            f"{mem_gb:8.2f} {fits:>3s} {t['useful_flops_ratio']:8.3f}")
+
+
+HEADER = (f"{'arch':20s} {'shape':12s} {'mesh':6s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'collective_s':>12s} "
+          f"{'dominant':>10s} {'mem_GB':>8s} {'fit':>3s} {'useful':>8s}")
+
+
+def run() -> List[str]:
+    """CSV lines for benchmarks.run: name,us_per_call,derived."""
+    lines = []
+    for r in load_records():
+        t = r["roofline"]
+        # us_per_call = dominant roofline term (the step-time lower bound)
+        step_us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        lines.append(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},{step_us:.1f},"
+            f"dominant={t['dominant']} useful={t['useful_flops_ratio']:.3f} "
+            f"mem_GB={r['memory']['peak_est_bytes']/1e9:.1f}")
+    return lines
+
+
+def print_table(tag: str = "") -> None:
+    print(HEADER)
+    for r in load_records(tag):
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    print_table()

@@ -1,0 +1,45 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV.
+  quant_fig6a_*    paper Fig 6a (average inference time, 3 variants)
+  quant_fig6b_*    paper Fig 6b (latency distribution)
+  quant_size_*     paper text: ~4x size reduction
+  quant_accuracy_* paper text: small accuracy degradation
+  lifecycle_*      paper §4 lifecycle operations
+  roofline_*       deliverable (g): per (arch x shape x mesh) dry-run terms
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import lifecycle_bench, quant_ablation, quant_bench, roofline
+
+    print("name,us_per_call,derived")
+    for line in quant_bench.run(iters=4 if args.fast else 10):
+        print(line)
+    sys.stdout.flush()
+    for line in quant_ablation.run():
+        print(line)
+    sys.stdout.flush()
+    for line in lifecycle_bench.run():
+        print(line)
+    sys.stdout.flush()
+    from benchmarks import serving_bench
+
+    for line in serving_bench.run():
+        print(line)
+    if not args.skip_roofline:
+        for line in roofline.run():
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

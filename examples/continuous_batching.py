@@ -1,0 +1,42 @@
+"""Continuous-batching serving demo: a stream of variable-length requests
+shares a fixed decode-slot pool; slots are reused the moment a sequence
+finishes (no batch barrier). Runs the quantized artifact end-to-end.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.core.quant import QuantConfig, quantize_tree
+from repro.models import init_params
+from repro.serving.scheduler import ContinuousBatchingEngine
+
+
+def main():
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    params, n = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
+    print(f"serving dynamic-int8 artifact ({len(n)} quantized tensors)")
+
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=96)
+    key = jax.random.PRNGKey(7)
+    reqs = []
+    for i in range(10):
+        key, sub = jax.random.split(key)
+        prompt = jax.random.randint(sub, (1, 4 + (i % 5) * 3), 0, cfg.vocab_size)
+        reqs.append(engine.submit(prompt, max_new_tokens=4 + (i * 7) % 12))
+    engine.run()
+    assert all(r.done for r in reqs)
+    m = engine.metrics(reqs)
+    naive_steps = sum(r.max_new_tokens for r in reqs)
+    print(f"completed {m['completed']} requests in {engine.steps} decode steps "
+          f"(sequential would take {naive_steps})")
+    print(f"mean TTFT {m['mean_ttft_s']*1e3:.0f} ms, "
+          f"throughput {m['throughput_tok_s']:.1f} tok/s")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt {r.tokens.shape[1]} toks -> {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

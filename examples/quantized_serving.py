@@ -1,0 +1,74 @@
+"""Quantization benchmark as a serving workload (paper Fig. 6 analog).
+
+Runs the same batched inference workload through fp32, static-int8 and
+dynamic-int8 sessions of the stablelm family model and reports mean latency +
+distribution (the container's CPU plays the Raspberry Pi 4's role).
+
+    PYTHONPATH=src python examples/quantized_serving.py [--scale 256]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.core.quant import (CalibrationSession, QuantConfig, quantize_tree,
+                              tree_size_bytes)
+from repro.models import forward, init_params
+from repro.serving import InferenceSession
+
+
+def build_variants(cfg, params, calib_batches):
+    variants = {"fp32": params}
+    qp_dyn, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
+    variants["dynamic_int8"] = qp_dyn
+    qc = QuantConfig("static_int8", min_size=1024)
+    sess = CalibrationSession(params, qc)
+    for b in calib_batches:
+        jax.block_until_ready(forward(sess.instrumented_params, b, cfg)[0])
+    qp_st, _ = quantize_tree(params, qc, sess.act_scales())
+    variants["static_int8"] = qp_st
+    return variants
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=192,
+                    help="d_model of the benchmark model")
+    ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = C.smoke_config("stablelm-1.6b").with_overrides(
+        dtype="float32", d_model=args.scale, n_layers=4,
+        d_ff=3 * args.scale, vocab_size=2048)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    def mk_batch(seed):
+        return {"tokens": jax.random.randint(
+            jax.random.PRNGKey(seed), (args.batch, args.seq), 0, cfg.vocab_size)}
+
+    variants = build_variants(cfg, params, [mk_batch(100 + i) for i in range(3)])
+    print(f"{'variant':14s} {'size MB':>8s} {'mean ms':>9s} {'p10':>7s} {'p90':>7s}")
+    results = {}
+    for name, p in variants.items():
+        session = InferenceSession(p, cfg)
+        session.logits(mk_batch(0))                     # warmup/compile
+        session.stats.latencies_ms = []
+        session.stats.calls = 0
+        session.stats.total_ms = 0.0
+        for i in range(args.iters):
+            session.logits(mk_batch(i))
+        lat = sorted(session.stats.latencies_ms)
+        results[name] = session.stats.mean_ms
+        print(f"{name:14s} {tree_size_bytes(p)/1e6:8.2f} "
+              f"{session.stats.mean_ms:9.2f} {lat[len(lat)//10]:7.2f} "
+              f"{lat[9*len(lat)//10]:7.2f}")
+    print(f"\nspeedup vs fp32:  static {results['fp32']/results['static_int8']:.2f}x"
+          f"  dynamic {results['fp32']/results['dynamic_int8']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""End-to-end EdgeMLOps VQI demo — the paper's Figures 1/4/5 as one script.
+
+1.  Train the VQI model (vision-stub frontend + LM backbone) on the synthetic
+    TTPLA-like task.
+2.  Publish v1 artifacts: fp32 + static-int8 (calibrated) + dynamic-int8.
+3.  Deploy to a heterogeneous fleet (standard + Pi-4-class devices; the
+    constrained devices only admit int8 variants).
+4.  Field engineers run inspections; asset-condition updates flow into the
+    asset-management table via telemetry.
+5.  Publish a *bad* v2 (simulated training regression); the canary health
+    gate catches it and auto-rolls-back — the paper's rollback story.
+
+    PYTHONPATH=src python examples/vqi_fleet.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import ASSET_TYPES, VQITask, vqi_batch
+from repro.fleet import ArtifactRegistry
+from repro.fleet.vqi import (TASK, evaluate, inspection_pipeline, make_fleet,
+                             publish_variants, train_vqi_model, vqi_config)
+from repro.serving import RequestQueue
+
+
+def main():
+    cfg = vqi_config()
+    print("== 1. training VQI model (synthetic TTPLA task) ==")
+    params, history = train_vqi_model(cfg, steps=150, log_fn=lambda s: None)
+    metrics = evaluate(params, cfg)
+    print(f"trained: asset_acc={metrics['asset_acc']:.3f} "
+          f"cond_acc={metrics['cond_acc']:.3f}")
+    assert metrics["asset_acc"] > 0.9, "VQI model failed to learn"
+
+    with tempfile.TemporaryDirectory() as root:
+        registry = ArtifactRegistry(root)
+        print("== 2. publishing v1 artifacts (fp32 / static / dynamic int8) ==")
+        refs = publish_variants(registry, "vqi", "v1", params, cfg)
+        for variant, ref in refs.items():
+            m = registry._index[ref.key]["metrics"]
+            print(f"  {variant:13s} {ref.size_bytes/1e6:6.2f} MB "
+                  f"cond_acc={m['cond_acc']:.3f} "
+                  f"lat={m['mean_latency_ms']:.1f} ms")
+        fp32_b = refs["fp32"].size_bytes
+        int8_b = refs["static_int8"].size_bytes
+        print(f"  size reduction fp32 -> int8: {fp32_b / int8_b:.2f}x")
+
+        print("== 3. canary rollout to heterogeneous fleet ==")
+        orch = make_fleet(registry)
+        report = orch.rollout("vqi", "v1",
+                              validate=lambda a: evaluate(a.session.params, cfg, 1)
+                              if a.session else {})
+        print(f"  rollout v1: success={report.succeeded} "
+              f"deployed={report.deployed}")
+        for did, h in orch.status().items():
+            print(f"  {did}: active={h['active']}")
+        # constrained devices must have received an int8 variant
+        for did, h in orch.status().items():
+            if "pi4" in did:
+                assert "int8" in h["active"], f"{did} got a non-int8 artifact!"
+
+        print("== 4. field inspections -> asset condition updates ==")
+        hub = orch.telemetry
+        key = jax.random.PRNGKey(42)
+        for round_i in range(2):
+            for did, agent in orch.devices.items():
+                key, sub = jax.random.split(key)
+                raw = dict(vqi_batch(sub, cfg, TASK, 4))
+                raw["asset_ids"] = [f"asset-{round_i}-{did}-{j}" for j in range(4)]
+                pipe = inspection_pipeline(agent, cfg, hub)
+                q = RequestQueue(pipe, max_batch=4,
+                                 stack=lambda ps: ps[0],
+                                 unstack=lambda res, n: [res])
+                q.submit(raw)
+                q.drain()
+        n_assets = len(hub.asset_conditions)
+        sample = list(hub.asset_conditions.items())[0]
+        print(f"  {n_assets} asset-condition records; e.g. {sample[0]} -> "
+              f"{sample[1]['asset_type']}/{sample[1]['condition']} "
+              f"(by {sample[1]['updated_by']})")
+        for variant in ("fp32", "static_int8"):
+            mk = f"vqi:v1:{variant}"
+            m = hub.model_metrics(mk)
+            if m["calls"]:
+                print(f"  telemetry {mk}: calls={m['calls']} "
+                      f"acc={m['accuracy']:.3f} "
+                      f"lat={m['mean_latency_ms']:.2f} ms")
+
+        print("== 5. bad v2 release -> canary health gate -> auto-rollback ==")
+        bad = jax.tree.map(
+            lambda x: x + 0.8 * jax.random.normal(jax.random.PRNGKey(1), x.shape,
+                                                  x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+        publish_variants(registry, "vqi", "v2", bad, cfg)
+        report2 = orch.rollout("vqi", "v2",
+                               validate=lambda a: evaluate(a.session.params, cfg, 1))
+        print(f"  rollout v2: success={report2.succeeded}")
+        print(f"  reason: {report2.reason[:110]}...")
+        assert not report2.succeeded, "health gate should reject the bad model"
+        # every device must still be serving v1
+        for did, h in orch.status().items():
+            assert ":v1:" in h["active"], f"{did} is not back on v1!"
+        print("  all devices back on v1 — auto-rollback verified")
+
+        print("== 6. feedback loop ==")
+        print(f"  retraining buffer: {len(hub.retrain_buffer)} low-confidence "
+              f"samples (ready={hub.retraining_ready(5)})")
+    print("VQI fleet demo complete.")
+
+
+if __name__ == "__main__":
+    main()

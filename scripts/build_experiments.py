@@ -1,0 +1,74 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+Usage: PYTHONPATH=src python scripts/build_experiments.py > /tmp/tables.md
+Emits: §Dry-run memory table, §Roofline table, §Perf variant comparisons.
+"""
+import glob
+import json
+import os
+import sys
+
+DRYRUN = "experiments/dryrun"
+
+
+def load(tag_filter=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        if p.endswith(".FAILED.json"):
+            continue
+        with open(p) as f:
+            r = json.load(f)
+        recs.append(r)
+    return recs
+
+
+def roofline_table(recs):
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | peak GB/dev | fits 16G | useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order[r["shape"]],
+                                         r["mesh"])):
+        if r.get("tag"):
+            continue
+        t = r["roofline"]
+        gb = r["memory"]["peak_est_bytes"] / 1e9
+        fits = "Y" if gb * 1e9 <= r["memory"]["hbm_per_chip"] else "**N**"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+              f"| {t['collective_s']:.4f} | {t['dominant'][:-2]} "
+              f"| {gb:.1f} | {fits} | {t['useful_flops_ratio']:.3f} |")
+
+
+def variant_table(recs, arch, shape, mesh="single"):
+    rows = [r for r in recs if r["arch"] == arch and r["shape"] == shape
+            and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r.get("tag") != "", r.get("tag", "")))
+    print(f"**{arch} x {shape} ({mesh} pod)**\n")
+    print("| variant | compute_s | memory_s | collective_s | peak GB/dev | "
+          "dominant |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        t = r["roofline"]
+        tag = r.get("tag") or "baseline"
+        print(f"| {tag} | {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+              f"| {t['collective_s']:.4f} "
+              f"| {r['memory']['peak_est_bytes']/1e9:.2f} "
+              f"| {t['dominant'][:-2]} |")
+    print()
+
+
+if __name__ == "__main__":
+    recs = load()
+    section = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if section in ("roofline", "all"):
+        roofline_table(recs)
+    if section in ("perf", "all"):
+        print()
+        for arch, shape in [("deepseek-7b", "decode_32k"),
+                            ("deepseek-v2-236b", "decode_32k"),
+                            ("kimi-k2-1t-a32b", "prefill_32k"),
+                            ("kimi-k2-1t-a32b", "train_4k"),
+                            ("deepseek-v2-236b", "prefill_32k"),
+                            ("deepseek-v2-236b", "train_4k")]:
+            variant_table(recs, arch, shape)

@@ -1,0 +1,67 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` / ``smoke_config``.
+
+Every config cites its source in ``source`` and matches the assignment table
+exactly. ``smoke_config`` returns the reduced same-family variant used by the
+per-arch CPU smoke tests (2 layers, d_model <= 512, <= 4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "phi_3_vision_4_2b",
+    "deepseek_7b",
+    "recurrentgemma_9b",
+    "deepseek_v2_236b",
+    "kimi_k2_1t_a32b",
+    "musicgen_large",
+    "mamba2_780m",
+    "mistral_nemo_12b",
+    "phi3_mini_3_8b",
+    "stablelm_1_6b",
+]
+
+# CLI ids (--arch) use dashes/dots as in the assignment
+CLI_ALIASES: Dict[str, str] = {
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "deepseek-7b": "deepseek_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "musicgen-large": "musicgen_large",
+    "mamba2-780m": "mamba2_780m",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "stablelm-1.6b": "stablelm_1_6b",
+}
+
+
+def _module(arch_id: str):
+    key = CLI_ALIASES.get(arch_id, arch_id.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def all_arch_ids() -> List[str]:
+    return list(CLI_ALIASES.keys())
+
+
+# ----------------------------------------------------------------------- #
+# Input shapes (assignment table)
+# ----------------------------------------------------------------------- #
+INPUT_SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k":    {"seq_len": 4_096,   "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32_768,  "global_batch": 32,  "kind": "prefill"},
+    "decode_32k":  {"seq_len": 32_768,  "global_batch": 128, "kind": "decode"},
+    "long_500k":   {"seq_len": 524_288, "global_batch": 1,   "kind": "decode"},
+}

@@ -1,0 +1,19 @@
+from repro.core.quant.quantize import (
+    QuantConfig,
+    dequantize_tensor,
+    quantize_tensor,
+    quantize_tree,
+    quantized_size_bytes,
+    tree_size_bytes,
+)
+from repro.core.quant.calibrate import CalibrationSession
+
+__all__ = [
+    "QuantConfig",
+    "quantize_tensor",
+    "dequantize_tensor",
+    "quantize_tree",
+    "quantized_size_bytes",
+    "tree_size_bytes",
+    "CalibrationSession",
+]

@@ -1,0 +1,93 @@
+"""Static-quantization calibration (the paper's "well-known data
+distribution" path).
+
+A CalibrationSession instruments every quantizable weight leaf with an
+observer id; ``linear`` then records the running absmax of each linear's
+*input activations* via ``io_callback`` while representative batches are run.
+The collected per-linear activation scales feed ``quantize_tree`` in
+static_int8 mode.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.quantize import QuantConfig, _leaf_path_str, quantizable
+
+_REGISTRY_LOCK = threading.Lock()
+_REGISTRY: Dict[int, Dict[int, float]] = {}   # session id -> obs id -> absmax
+_NEXT_SESSION = [0]
+
+
+def _record(session_id, obs_id, absmax):
+    sid, oid, val = int(session_id), int(obs_id), float(absmax)
+    with _REGISTRY_LOCK:
+        sess = _REGISTRY.setdefault(sid, {})
+        sess[oid] = max(sess.get(oid, 0.0), val)
+
+
+def observe(session_id, obs_id, x: jax.Array) -> None:
+    """Called from layers.linear for observer leaves (works under jit)."""
+    absmax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    jax.experimental.io_callback(
+        _record, None, session_id, obs_id, absmax, ordered=False)
+
+
+class CalibrationSession:
+    """Usage:
+        sess = CalibrationSession(params, qc)
+        for batch in calib_batches:
+            forward(sess.instrumented_params, batch, cfg)   # records absmax
+        qparams, paths = quantize_tree(params, qc, sess.act_scales())
+    """
+
+    STACKED_ROOTS = ("layers", "head_layers", "groups", "tail")
+
+    def __init__(self, params, qc: QuantConfig):
+        with _REGISTRY_LOCK:
+            self.session_id = _NEXT_SESSION[0]
+            _NEXT_SESSION[0] += 1
+            _REGISTRY[self.session_id] = {}
+        self.qc = qc
+        # path -> (first obs id, n layers); scan-stacked leaves get one id per
+        # layer so the recorded scale is per-layer ([L] arrays in act_scales).
+        self._alloc: Dict[str, tuple] = {}
+        counter = [0]
+
+        def visit(path, leaf):
+            p = _leaf_path_str(path)
+            if not quantizable(p, leaf, qc):
+                return leaf
+            # embedding tables are gathered, not matmul'd: no activation to
+            # observe (static mode falls back to weight-only int8 for them)
+            if p.split("/")[-1] in ("embed", "extra_embeds", "out_heads"):
+                return leaf
+            stacked = p.split("/")[0] in self.STACKED_ROOTS
+            n = leaf.shape[0] if stacked else 1
+            oid = counter[0]
+            counter[0] += n
+            self._alloc[p] = (oid, n)
+            if stacked:
+                ids = jnp.arange(oid, oid + n, dtype=jnp.int32)
+                sess = jnp.full((n,), self.session_id, jnp.int32)
+            else:
+                ids = jnp.int32(oid)
+                sess = jnp.int32(self.session_id)
+            return {"w": leaf, "obs_id": ids, "obs_session": sess}
+
+        self.instrumented_params = jax.tree_util.tree_map_with_path(visit, params)
+
+    def act_scales(self) -> Dict[str, object]:
+        """{path: absmax} — float for plain leaves, list[float] for stacked."""
+        with _REGISTRY_LOCK:
+            seen = dict(_REGISTRY.get(self.session_id, {}))
+        out: Dict[str, object] = {}
+        for p, (oid, n) in self._alloc.items():
+            vals = [seen.get(oid + i, 0.0) for i in range(n)]
+            if any(v == 0.0 for v in vals):      # never observed -> skip
+                continue
+            out[p] = vals[0] if n == 1 else vals
+        return out

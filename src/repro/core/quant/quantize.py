@@ -1,0 +1,200 @@
+"""Post-training quantization — the paper's §5 technique as a tree transform.
+
+``quantize_tree`` maps every quantizable matmul weight in a param tree to
+
+    dynamic_int8: {"w_int8": int8[K,N], "scale": f32[1,N] or f32[1,1]}
+    static_int8:  {... , "act_scale": f32[]}   (from a CalibrationSession)
+
+Weights use symmetric signed-int8 (the paper's choice); per-channel by
+default. ``repro.models.layers.linear`` dispatches on the leaf structure, so
+quantization changes no caller code — mirroring the paper's observation that
+input/output shapes (and hence "the caller interaction") are unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "dynamic_int8"          # none | dynamic_int8 | static_int8
+    granularity: str = "per_channel"    # per_channel | per_tensor | per_group
+    group_size: int = 128               # contraction-dim group (per_group)
+    bits: int = 8                       # 8 | 4  (int4 = paper "future work")
+    clip_percentile: float = 0.0        # 0 = absmax; e.g. 99.9 clips outliers
+    symmetric: bool = True              # paper: signed symmetric int8
+    # Which weight leaves to quantize (matmul weights + embedding tables;
+    # norms / scalars / recurrence gates stay fp — DESIGN.md
+    # §Arch-applicability). Embeddings dequantize at the gather.
+    include: str = (
+        r"(wq|wk|wv|wo|wi|w_in|w_out|w_x|w_gate|w_uq|w_ukv|w_dq|w_dkv|"
+        r"shared_wi|shared_wo|unembed|frontend_proj|embed|extra_embeds|"
+        r"out_heads)$"
+    )
+    exclude: str = r"(rec/(wa|wi)|lam|conv_w|router|A_log|dt_bias)"
+    min_size: int = 4096                # skip tiny leaves
+
+
+def _absmax(x: jax.Array, per_channel: bool) -> jax.Array:
+    """Per-channel: reduce only the contraction axis (-2), keeping any leading
+    stacked-layer / expert dims so scan-over-layers still unstacks cleanly.
+    Per-tensor: reduce the trailing matmul dims (-2, -1), keep leading dims."""
+    if x.ndim >= 2:
+        axes = (x.ndim - 2,) if per_channel else (x.ndim - 2, x.ndim - 1)
+        return jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    return jnp.max(jnp.abs(x)).reshape((1,) * max(x.ndim, 1))
+
+
+def _grouped(xf: jax.Array, group_size: int):
+    """Split the contraction axis (-2) into groups: [..., K, N] ->
+    [..., K/g, g, N]. Requires K % group_size == 0 (true for every assigned
+    arch dim; callers fall back to per-channel otherwise)."""
+    k = xf.shape[-2]
+    g = min(group_size, k)
+    if k % g:
+        return None
+    return xf.reshape(*xf.shape[:-2], k // g, g, xf.shape[-1])
+
+
+def quantize_tensor(x: jax.Array, *, per_channel: bool = True,
+                    symmetric: bool = True, bits: int = 8,
+                    group_size: int = 0,
+                    clip_percentile: float = 0.0) -> Dict[str, jax.Array]:
+    """Symmetric: scale = absmax/qmax. Asymmetric: affine with zero point.
+
+    bits=4 stores int4 values in an int8 carrier (qmax 7) — the paper's
+    "advanced quantization techniques" future work; group_size > 0 gives one
+    scale per ``group_size`` contraction elements per channel (finer than
+    per-channel, the standard W4 recipe); clip_percentile replaces absmax
+    with a percentile (outlier clipping).
+    """
+    qmax = 7.0 if bits == 4 else 127.0
+    xf = x.astype(jnp.float32)
+    if group_size and x.ndim >= 2:
+        xg = _grouped(xf, group_size)
+        if xg is not None:
+            absmax = jnp.maximum(
+                jnp.max(jnp.abs(xg), axis=-2, keepdims=True), 1e-12)
+            if clip_percentile:
+                pct = jnp.percentile(jnp.abs(xg), clip_percentile, axis=-2,
+                                     keepdims=True)
+                absmax = jnp.maximum(jnp.minimum(absmax, pct), 1e-12)
+            q = jnp.clip(jnp.round(xg * (qmax / absmax)), -qmax, qmax)
+            q = q.reshape(xf.shape).astype(jnp.int8)
+            # grouped encoding: scale keeps the extra group axis
+            # ([..., K/g, 1, N]); dequant derives g from the rank difference
+            key = "w_int4" if bits == 4 else "w_int8"
+            return {key: q, "scale": absmax / qmax}
+    if symmetric:
+        absmax = _absmax(xf, per_channel)
+        if clip_percentile and x.ndim >= 2:
+            axes = (x.ndim - 2,) if per_channel else (x.ndim - 2, x.ndim - 1)
+            pct = jnp.percentile(jnp.abs(xf), clip_percentile, axis=axes,
+                                 keepdims=True)
+            absmax = jnp.minimum(absmax, pct)
+        absmax = jnp.maximum(absmax, 1e-12)
+        q = jnp.clip(jnp.round(xf * (qmax / absmax)), -qmax, qmax).astype(jnp.int8)
+        return {("w_int4" if bits == 4 else "w_int8"): q, "scale": absmax / qmax}
+    axes = ((x.ndim - 2,) if per_channel else (x.ndim - 2, x.ndim - 1)) \
+        if x.ndim >= 2 else None
+    hi = jnp.max(xf, axis=axes, keepdims=True)
+    lo = jnp.min(xf, axis=axes, keepdims=True)
+    scale = jnp.maximum((hi - lo) / 255.0, 1e-12)
+    zero = jnp.round(-128.0 - lo / scale)
+    q = jnp.clip(jnp.round(xf / scale) + zero, -128, 127).astype(jnp.int8)
+    return {"w_int8": q, "scale": scale, "zero": zero}
+
+
+def quant_values(q: Dict[str, jax.Array]) -> jax.Array:
+    return q["w_int4"] if "w_int4" in q else q["w_int8"]
+
+
+def dequantize_tensor(q: Dict[str, jax.Array], dtype=jnp.float32) -> jax.Array:
+    x = quant_values(q).astype(jnp.float32)
+    if "zero" in q:
+        x = x - q["zero"]
+    scale = q["scale"]
+    if scale.ndim == x.ndim + 1:           # grouped: scale [..., K/g, 1, N]
+        g = x.shape[-2] // scale.shape[-3]
+        xg = _grouped(x, g)
+        return (xg * scale).reshape(x.shape).astype(dtype)
+    return (x * scale).astype(dtype)
+
+
+def _leaf_path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def quantizable(path: str, leaf, qc: QuantConfig) -> bool:
+    if not hasattr(leaf, "size") or leaf.size < qc.min_size or leaf.ndim < 2:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    if re.search(qc.exclude, path):
+        return False
+    return re.search(qc.include, path) is not None
+
+
+def quantize_tree(params, qc: QuantConfig,
+                  act_scales: Optional[Dict[str, float]] = None):
+    """Returns (quantized tree, list of quantized paths).
+
+    static_int8 requires ``act_scales`` (path -> activation absmax) from a
+    CalibrationSession; missing paths fall back to dynamic for that leaf.
+    """
+    if qc.mode == "none":
+        return params, []
+    quantized = []
+
+    def visit(path, leaf):
+        p = _leaf_path_str(path)
+        if not quantizable(p, leaf, qc):
+            return leaf
+        q = quantize_tensor(
+            leaf,
+            per_channel=qc.granularity != "per_tensor",
+            symmetric=qc.symmetric,
+            bits=qc.bits,
+            group_size=qc.group_size if qc.granularity == "per_group" else 0,
+            clip_percentile=qc.clip_percentile)
+        if qc.mode == "static_int8" and act_scales and p in act_scales:
+            # scalar for plain leaves, [L] for scan-stacked leaves
+            s = jnp.asarray(act_scales[p], jnp.float32)
+            q["act_scale"] = jnp.maximum(s, 1e-12) / 127.0
+        quantized.append(p)
+        return q
+
+    return jax.tree_util.tree_map_with_path(visit, params), quantized
+
+
+def tree_size_bytes(params) -> int:
+    """Artifact size; int4 leaves (int8 carrier + bits=4 marker) count as
+    packed nibbles, matching the on-wire format a real artifact would use."""
+    total = 0
+
+    def visit(node):
+        nonlocal total
+        if isinstance(node, dict) and ("w_int8" in node or "w_int4" in node):
+            for k, v in node.items():
+                if k == "w_int4":
+                    total += (v.size + 1) // 2     # packed nibbles on the wire
+                else:
+                    total += v.size * v.dtype.itemsize
+            return node
+        if hasattr(node, "size"):
+            total += node.size * node.dtype.itemsize
+        return node
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda n: isinstance(n, dict)
+                 and ("w_int8" in n or "w_int4" in n))
+    return total
+
+
+def quantized_size_bytes(params) -> int:
+    return tree_size_bytes(params)

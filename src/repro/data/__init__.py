@@ -1,0 +1,3 @@
+from repro.data.pipeline import (ASSET_TYPES, CONDITIONS, VQITask, lm_batch,
+                                 lm_stream, vqi_batch, vqi_eval_accuracy,
+                                 vqi_stream)

@@ -1,0 +1,124 @@
+"""Synthetic data pipelines (offline container: no external datasets).
+
+``lm_stream`` — Zipf-distributed token stream with local n-gram structure so
+training loss actually decreases (used by examples/train_lm.py).
+
+``vqi_dataset`` — the TTPLA-like synthetic visual-quality-inspection task
+(paper §2): each sample is a set of patch embeddings (the stubbed vision
+frontend output) whose distribution is determined by (asset_type, condition);
+the model must emit the two classification tokens. Separable clusters + noise
+make accuracy a meaningful metric for the quantization comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.training.loss import IGNORE
+
+ASSET_TYPES = ("transmission_tower", "power_line", "transformer", "switchgear")
+CONDITIONS = ("good", "degraded", "critical")
+
+
+# --------------------------------------------------------------------- #
+# Language-model stream
+# --------------------------------------------------------------------- #
+def lm_batch(key, cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    v = cfg.vocab_size
+    # Zipf marginal + first-order structure: next ~ (prev * 31 + zipf) % V
+    zipf = jnp.clip((jax.random.pareto(k1, 1.2, (batch, seq)) * 8).astype(jnp.int32),
+                    0, v - 1)
+    base = jax.random.randint(k2, (batch, 1), 0, v)
+    toks = (jnp.cumsum(zipf, axis=1) * 31 + base) % v
+    if cfg.n_codebooks > 1:
+        toks = jnp.stack([(toks + 7 * k) % v for k in range(cfg.n_codebooks)], -1)
+    labels = jnp.roll(toks, -1, axis=1)
+    if cfg.n_codebooks > 1:
+        labels = labels.at[:, -1, :].set(IGNORE)
+    else:
+        labels = labels.at[:, -1].set(IGNORE)
+    return {"tokens": toks, "labels": labels}
+
+
+def lm_stream(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+              ) -> Iterator[Dict[str, jax.Array]]:
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield lm_batch(sub, cfg, batch, seq)
+
+
+# --------------------------------------------------------------------- #
+# VQI synthetic dataset (TTPLA-like)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class VQITask:
+    """Token layout:  [frontend patches] [BOS] -> predict asset, condition."""
+    n_assets: int = len(ASSET_TYPES)
+    n_conditions: int = len(CONDITIONS)
+    noise: float = 0.6
+
+    def vocab_layout(self, cfg: ModelConfig) -> Dict[str, int]:
+        # reserve the top of the vocab for class tokens
+        base = cfg.vocab_size - self.n_assets - self.n_conditions - 1
+        return {"bos": base,
+                "asset0": base + 1,
+                "cond0": base + 1 + self.n_assets}
+
+
+def vqi_batch(key, cfg: ModelConfig, task: VQITask, batch: int
+              ) -> Dict[str, jax.Array]:
+    """Patch embeddings drawn from class-conditioned Gaussian clusters."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    lay = task.vocab_layout(cfg)
+    asset = jax.random.randint(k1, (batch,), 0, task.n_assets)
+    cond = jax.random.randint(k2, (batch,), 0, task.n_conditions)
+
+    # deterministic class centroids in frontend space
+    ckey = jax.random.PRNGKey(1234)
+    centroids = jax.random.normal(
+        ckey, (task.n_assets, task.n_conditions, cfg.frontend_dim)) * 2.0
+    mu = centroids[asset, cond]                                    # [B, fd]
+    patches = mu[:, None, :] + task.noise * jax.random.normal(
+        k3, (batch, cfg.n_frontend_tokens, cfg.frontend_dim))
+
+    # text stream: BOS, asset-token, cond-token
+    toks = jnp.stack([
+        jnp.full((batch,), lay["bos"]),
+        lay["asset0"] + asset,
+        lay["cond0"] + cond,
+    ], axis=1).astype(jnp.int32)
+    labels = jnp.stack([
+        lay["asset0"] + asset,      # predict asset from BOS
+        lay["cond0"] + cond,        # predict condition from asset token
+        jnp.full((batch,), IGNORE),
+    ], axis=1).astype(jnp.int32)
+    return {"tokens": toks, "labels": labels,
+            "frontend_embeds": patches.astype(jnp.float32),
+            "asset": asset, "cond": cond}
+
+
+def vqi_stream(cfg: ModelConfig, batch: int, seed: int = 0,
+               task: VQITask = VQITask()) -> Iterator[Dict[str, jax.Array]]:
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, sub = jax.random.split(key)
+        yield vqi_batch(sub, cfg, task, batch)
+
+
+def vqi_eval_accuracy(logits: jax.Array, batch, cfg: ModelConfig,
+                      task: VQITask = VQITask()) -> Tuple[float, float]:
+    """(asset accuracy, condition accuracy) from teacher-forced logits."""
+    lay = task.vocab_layout(cfg)
+    off = cfg.n_frontend_tokens
+    a_slice = logits[:, off + 0, lay["asset0"]: lay["asset0"] + task.n_assets]
+    c_slice = logits[:, off + 1, lay["cond0"]: lay["cond0"] + task.n_conditions]
+    a_acc = float(jnp.mean(jnp.argmax(a_slice, -1) == batch["asset"]))
+    c_acc = float(jnp.mean(jnp.argmax(c_slice, -1) == batch["cond"]))
+    return a_acc, c_acc

@@ -1,0 +1,4 @@
+from repro.fleet.agent import DeviceProfile, EdgeAgent, InstallError
+from repro.fleet.orchestrator import FleetOrchestrator, HealthGate, RolloutReport
+from repro.fleet.registry import ArtifactRef, ArtifactRegistry
+from repro.fleet.telemetry import InferenceRecord, TelemetryHub

@@ -1,0 +1,112 @@
+"""Edge device agent — the thin-edge.io analog (DESIGN §2).
+
+An EdgeAgent manages the artifact lifecycle on one device: install from the
+registry (with device-profile admission checks), activate (build an
+InferenceSession), keep the previous version for instant rollback, expose
+health metrics, and emit telemetry for the cloud feedback loop.
+
+Heterogeneous fleets (paper §1 "adapting models for heterogeneous devices")
+are modelled by DeviceProfile: small devices only admit int8 variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.fleet.registry import ArtifactRef, ArtifactRegistry
+from repro.serving.engine import InferenceSession
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str = "edge-standard"
+    memory_bytes: int = 4 * 1024**3          # Pi-4-class default
+    allowed_variants: tuple = ("fp32", "static_int8", "dynamic_int8")
+
+    def admits(self, ref: ArtifactRef) -> Optional[str]:
+        """Returns a rejection reason or None if the artifact is admissible."""
+        if ref.variant not in self.allowed_variants:
+            return f"variant {ref.variant} not allowed on {self.name}"
+        if ref.size_bytes > self.memory_bytes:
+            return (f"artifact {ref.size_bytes/1e6:.0f}MB exceeds "
+                    f"{self.name} memory {self.memory_bytes/1e6:.0f}MB")
+        return None
+
+
+class InstallError(RuntimeError):
+    pass
+
+
+class EdgeAgent:
+    def __init__(self, device_id: str, registry: ArtifactRegistry,
+                 profile: DeviceProfile = DeviceProfile()):
+        self.device_id = device_id
+        self.registry = registry
+        self.profile = profile
+        self.installed: List[ArtifactRef] = []     # newest last
+        self.active: Optional[ArtifactRef] = None
+        self.session: Optional[InferenceSession] = None
+        self.events: List[Dict[str, Any]] = []
+        self.error_count = 0
+
+    # ---------------------------------------------------------------- #
+    def _log(self, kind: str, **kw) -> None:
+        self.events.append({"t": time.time(), "kind": kind,
+                            "device": self.device_id, **kw})
+
+    def install(self, ref: ArtifactRef) -> None:
+        """Download + verify + stage (does not activate)."""
+        reason = self.profile.admits(ref)
+        if reason:
+            self._log("install_rejected", artifact=ref.key, reason=reason)
+            raise InstallError(reason)
+        # fetch verifies sha256 integrity
+        self.registry.fetch(ref)
+        self.installed.append(ref)
+        self._log("installed", artifact=ref.key)
+
+    def activate(self, ref: ArtifactRef) -> None:
+        if ref not in self.installed:
+            self.install(ref)
+        params, cfg, _ = self.registry.fetch(ref)
+        self.session = InferenceSession(params, cfg)
+        self.active = ref
+        self._log("activated", artifact=ref.key)
+
+    def rollback(self) -> ArtifactRef:
+        """Re-activate the most recent previously-installed version."""
+        candidates = [r for r in self.installed
+                      if self.active is None or r.version != self.active.version]
+        if not candidates:
+            raise InstallError(f"{self.device_id}: nothing to roll back to")
+        prev = candidates[-1]
+        self._log("rollback", frm=self.active.key if self.active else None,
+                  to=prev.key)
+        self.activate(prev)
+        return prev
+
+    # ---------------------------------------------------------------- #
+    def infer(self, batch) -> jax.Array:
+        if self.session is None:
+            raise InstallError(f"{self.device_id}: no active model")
+        try:
+            return self.session.logits(batch)
+        except Exception:
+            self.error_count += 1
+            raise
+
+    def health(self) -> Dict[str, Any]:
+        s = self.session.stats if self.session else None
+        return {
+            "device": self.device_id,
+            "profile": self.profile.name,
+            "active": self.active.key if self.active else None,
+            "installed": [r.key for r in self.installed],
+            "calls": s.calls if s else 0,
+            "mean_latency_ms": s.mean_ms if s else 0.0,
+            "p90_latency_ms": s.percentile_ms(0.9) if s else 0.0,
+            "errors": self.error_count,
+        }

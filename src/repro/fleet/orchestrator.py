@@ -1,0 +1,132 @@
+"""Fleet orchestrator — Cumulocity *Device Management* + OTA analog.
+
+Canary rollouts with health gates and automatic rollback:
+    1. deploy to a canary subset,
+    2. evaluate a validation workload on each canary (accuracy + latency vs
+       the incumbent),
+    3. regression -> roll canaries back and abort; healthy -> fleet-wide.
+
+Device heterogeneity is first-class: each device's profile selects the
+artifact *variant* (e.g. 4GB-class devices get int8) via ``variant_policy``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.fleet.agent import EdgeAgent, InstallError
+from repro.fleet.registry import ArtifactRef, ArtifactRegistry
+from repro.fleet.telemetry import TelemetryHub
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthGate:
+    max_accuracy_drop: float = 0.02      # absolute, vs incumbent
+    max_latency_ratio: float = 1.5       # vs incumbent mean latency
+
+    def ok(self, base: Dict[str, float], cand: Dict[str, float]) -> bool:
+        if base.get("accuracy") is not None and cand.get("accuracy") is not None:
+            if cand["accuracy"] < base["accuracy"] - self.max_accuracy_drop:
+                return False
+        if base.get("mean_latency_ms"):
+            if cand["mean_latency_ms"] > self.max_latency_ratio * base["mean_latency_ms"]:
+                return False
+        return True
+
+
+@dataclasses.dataclass
+class RolloutReport:
+    model: str
+    version: str
+    succeeded: bool
+    deployed: List[str]
+    rolled_back: List[str]
+    reason: str = ""
+    canary_metrics: Optional[Dict[str, Dict[str, float]]] = None
+
+
+class FleetOrchestrator:
+    def __init__(self, registry: ArtifactRegistry,
+                 telemetry: Optional[TelemetryHub] = None,
+                 variant_policy: Optional[Callable[[EdgeAgent], str]] = None):
+        self.registry = registry
+        self.telemetry = telemetry or TelemetryHub()
+        self.devices: Dict[str, EdgeAgent] = {}
+        # default policy: small-memory devices get static int8
+        self.variant_policy = variant_policy or (
+            lambda agent: "static_int8"
+            if agent.profile.memory_bytes <= 4 * 1024**3 else "fp32")
+        self.history: List[RolloutReport] = []
+
+    def register_device(self, agent: EdgeAgent) -> None:
+        self.devices[agent.device_id] = agent
+
+    # ---------------------------------------------------------------- #
+    def _ref_for(self, agent: EdgeAgent, name: str, version: str) -> ArtifactRef:
+        variant = self.variant_policy(agent)
+        available = self.registry.variants(name, version)
+        if variant not in available:
+            # degrade gracefully: any admissible variant
+            for v in available:
+                if agent.profile.admits(self.registry.ref(name, version, v)) is None:
+                    variant = v
+                    break
+        return self.registry.ref(name, version, variant)
+
+    def rollout(self, name: str, version: str,
+                validate: Callable[[EdgeAgent], Dict[str, float]],
+                canary_fraction: float = 0.25,
+                gate: HealthGate = HealthGate()) -> RolloutReport:
+        """validate(agent) runs a validation workload on the *active* model
+        and returns {"accuracy": ..., "mean_latency_ms": ...}."""
+        agents = list(self.devices.values())
+        n_canary = max(1, int(len(agents) * canary_fraction))
+        canaries, rest = agents[:n_canary], agents[n_canary:]
+
+        deployed, rolled_back = [], []
+        canary_metrics: Dict[str, Dict[str, float]] = {}
+        for agent in canaries:
+            baseline = validate(agent) if agent.session else {}
+            try:
+                agent.activate(self._ref_for(agent, name, version))
+            except InstallError as e:
+                report = RolloutReport(name, version, False, deployed,
+                                       rolled_back, f"canary install: {e}")
+                self.history.append(report)
+                return report
+            cand = validate(agent)
+            canary_metrics[agent.device_id] = cand
+            if baseline and not gate.ok(baseline, cand):
+                agent.rollback()
+                rolled_back.append(agent.device_id)
+                report = RolloutReport(
+                    name, version, False, deployed, rolled_back,
+                    f"health gate failed on {agent.device_id}: "
+                    f"baseline={baseline} candidate={cand}", canary_metrics)
+                self.history.append(report)
+                return report
+            deployed.append(agent.device_id)
+
+        for agent in rest:
+            try:
+                agent.activate(self._ref_for(agent, name, version))
+                deployed.append(agent.device_id)
+            except InstallError:
+                rolled_back.append(agent.device_id)
+        report = RolloutReport(name, version, True, deployed, rolled_back,
+                               "ok", canary_metrics)
+        self.history.append(report)
+        return report
+
+    def fleet_rollback(self, devices: Optional[Sequence[str]] = None) -> List[str]:
+        out = []
+        for did in (devices or list(self.devices)):
+            try:
+                self.devices[did].rollback()
+                out.append(did)
+            except InstallError:
+                pass
+        return out
+
+    def status(self) -> Dict[str, Any]:
+        return {did: agent.health() for did, agent in self.devices.items()}

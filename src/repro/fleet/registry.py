@@ -1,0 +1,101 @@
+"""Artifact registry — the Cumulocity IoT *Software Repository* analog.
+
+Content-addressed, versioned store of model artifacts (weights + manifest).
+An artifact is a quantization variant of a trained model: the same model
+version is typically published as fp32 / static_int8 / dynamic_int8 variants
+and devices pull the variant their profile requires (paper §4 Model Creation
+-> repository -> device flow).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.models.config import ModelConfig
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactRef:
+    name: str
+    version: str
+    variant: str            # fp32 | static_int8 | dynamic_int8
+    sha256: str
+    size_bytes: int
+
+    @property
+    def key(self) -> str:
+        return f"{self.name}:{self.version}:{self.variant}"
+
+
+class ArtifactRegistry:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._index_path = os.path.join(root, "index.json")
+        self._index: Dict[str, Dict[str, Any]] = {}
+        if os.path.exists(self._index_path):
+            with open(self._index_path) as f:
+                self._index = json.load(f)
+
+    # ------------------------------------------------------------- #
+    def _save_index(self) -> None:
+        with open(self._index_path, "w") as f:
+            json.dump(self._index, f, indent=1)
+
+    def _dir(self, name: str, version: str, variant: str) -> str:
+        return os.path.join(self.root, name, version, variant)
+
+    def publish(self, name: str, version: str, params, cfg: ModelConfig,
+                variant: str = "fp32",
+                metrics: Optional[Dict[str, float]] = None) -> ArtifactRef:
+        d = self._dir(name, version, variant)
+        manifest = save_checkpoint(d, params, cfg, meta={
+            "name": name, "version": version, "variant": variant,
+            "published_at": time.time(), "metrics": metrics or {},
+        })
+        ref = ArtifactRef(name, version, variant,
+                          manifest["sha256"], manifest["size_bytes"])
+        self._index[ref.key] = {
+            "sha256": ref.sha256, "size_bytes": ref.size_bytes,
+            "dir": d, "metrics": metrics or {}, "published_at": time.time(),
+        }
+        self._save_index()
+        return ref
+
+    def fetch(self, ref: ArtifactRef) -> Tuple[Any, ModelConfig, Dict[str, Any]]:
+        """Integrity-checked load (sha256 verified by load_checkpoint)."""
+        entry = self._index.get(ref.key)
+        if entry is None:
+            raise KeyError(f"unknown artifact {ref.key}")
+        params, cfg, manifest = load_checkpoint(entry["dir"])
+        if manifest["sha256"] != ref.sha256:
+            raise IOError(f"registry integrity failure for {ref.key}")
+        return params, cfg, manifest
+
+    def versions(self, name: str) -> List[str]:
+        seen = []
+        for key in self._index:
+            n, v, _ = key.split(":")
+            if n == name and v not in seen:
+                seen.append(v)
+        return sorted(seen)
+
+    def variants(self, name: str, version: str) -> List[str]:
+        return sorted(key.split(":")[2] for key in self._index
+                      if key.startswith(f"{name}:{version}:"))
+
+    def ref(self, name: str, version: Optional[str] = None,
+            variant: str = "fp32") -> ArtifactRef:
+        if version is None:
+            vs = self.versions(name)
+            if not vs:
+                raise KeyError(f"no versions for {name}")
+            version = vs[-1]
+        key = f"{name}:{version}:{variant}"
+        entry = self._index[key]
+        return ArtifactRef(name, version, variant,
+                           entry["sha256"], entry["size_bytes"])

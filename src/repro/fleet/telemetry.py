@@ -1,0 +1,73 @@
+"""Telemetry hub + feedback loop (paper §4 right-to-left arrow).
+
+Devices push inference records; the hub aggregates per-device and per-model
+metrics, maintains the asset-condition table (the "asset management system"
+of the VQI use case), and collects low-confidence / misclassified samples as
+the retraining buffer that closes the MLOps loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class InferenceRecord:
+    device_id: str
+    model_key: str
+    latency_ms: float
+    asset_id: Optional[str] = None
+    prediction: Optional[Dict[str, Any]] = None
+    confidence: float = 1.0
+    correct: Optional[bool] = None
+    sample: Optional[Dict[str, Any]] = None   # raw inputs for the retrain loop
+    t: float = dataclasses.field(default_factory=time.time)
+
+
+class TelemetryHub:
+    def __init__(self, retrain_confidence_threshold: float = 0.6):
+        self.records: List[InferenceRecord] = []
+        self.asset_conditions: Dict[str, Dict[str, Any]] = {}
+        self.retrain_buffer: List[InferenceRecord] = []
+        self.threshold = retrain_confidence_threshold
+
+    def push(self, rec: InferenceRecord) -> None:
+        self.records.append(rec)
+        if rec.asset_id and rec.prediction:
+            self.asset_conditions[rec.asset_id] = {
+                "condition": rec.prediction.get("condition"),
+                "asset_type": rec.prediction.get("asset_type"),
+                "updated_by": rec.device_id,
+                "model": rec.model_key,
+                "t": rec.t,
+            }
+        if rec.confidence < self.threshold or rec.correct is False:
+            self.retrain_buffer.append(rec)
+
+    # ------------------------------------------------------------- #
+    def model_metrics(self, model_key: str) -> Dict[str, float]:
+        rs = [r for r in self.records if r.model_key == model_key]
+        if not rs:
+            return {"calls": 0}
+        lat = sorted(r.latency_ms for r in rs)
+        judged = [r for r in rs if r.correct is not None]
+        acc = (sum(r.correct for r in judged) / len(judged)) if judged else None
+        return {
+            "calls": len(rs),
+            "mean_latency_ms": sum(lat) / len(lat),
+            "p90_latency_ms": lat[min(int(0.9 * len(lat)), len(lat) - 1)],
+            "accuracy": acc,
+        }
+
+    def device_metrics(self) -> Dict[str, Dict[str, float]]:
+        by_dev: Dict[str, List[InferenceRecord]] = defaultdict(list)
+        for r in self.records:
+            by_dev[r.device_id].append(r)
+        return {d: {"calls": len(rs),
+                    "mean_latency_ms": sum(x.latency_ms for x in rs) / len(rs)}
+                for d, rs in by_dev.items()}
+
+    def retraining_ready(self, min_samples: int) -> bool:
+        return len(self.retrain_buffer) >= min_samples

@@ -1,0 +1,208 @@
+"""VQI use case end-to-end (paper §2 + §5): train a small VQI model, publish
+fp32 / static-int8 / dynamic-int8 artifacts, deploy to a heterogeneous fleet,
+run inspections, and push asset-condition updates through telemetry.
+
+This module is the paper's Figure 5 as executable code.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.core.quant import CalibrationSession, QuantConfig, quantize_tree
+from repro.data.pipeline import (ASSET_TYPES, CONDITIONS, VQITask, vqi_batch,
+                                 vqi_eval_accuracy, vqi_stream)
+from repro.fleet.agent import DeviceProfile, EdgeAgent
+from repro.fleet.orchestrator import FleetOrchestrator, HealthGate
+from repro.fleet.registry import ArtifactRegistry
+from repro.fleet.telemetry import InferenceRecord, TelemetryHub
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.serving.engine import Pipeline
+from repro.training.loop import fit
+from repro.training.optimizer import OptimizerConfig
+
+TASK = VQITask()
+
+
+def vqi_config(d_model: int = 128) -> ModelConfig:
+    """The VQI model family: phi-3-vision reduced (vision stub + LM head)."""
+    return C.smoke_config("phi-3-vision-4.2b").with_overrides(
+        d_model=d_model, dtype="float32", n_frontend_tokens=8)
+
+
+def train_vqi_model(cfg: ModelConfig, steps: int = 150, batch: int = 32,
+                    log_fn=print):
+    oc = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=steps,
+                         weight_decay=0.01)
+    stream = vqi_stream(cfg, batch)
+    return fit(cfg, oc, stream, steps, log_fn=log_fn)
+
+
+def evaluate(params, cfg: ModelConfig, n_batches: int = 4, batch: int = 64,
+             seed: int = 999) -> Dict[str, float]:
+    accs, cond_accs = [], []
+    key = jax.random.PRNGKey(seed)
+    fwd = jax.jit(lambda p, b: forward(p, b, cfg)[0])
+    t0 = time.perf_counter()
+    for i in range(n_batches):
+        key, sub = jax.random.split(key)
+        b = vqi_batch(sub, cfg, TASK, batch)
+        logits = jax.block_until_ready(fwd(params, b))
+        a, c = vqi_eval_accuracy(logits, b, cfg, TASK)
+        accs.append(a)
+        cond_accs.append(c)
+    dt = (time.perf_counter() - t0) * 1e3 / n_batches
+    return {"asset_acc": sum(accs) / len(accs),
+            "cond_acc": sum(cond_accs) / len(cond_accs),
+            "accuracy": sum(cond_accs) / len(cond_accs),
+            "mean_latency_ms": dt}
+
+
+def publish_variants(registry: ArtifactRegistry, name: str, version: str,
+                     params, cfg: ModelConfig,
+                     calib_batches: int = 4) -> Dict[str, Any]:
+    """fp32 + dynamic_int8 + static_int8 (calibrated) — paper §5's three bars."""
+    refs = {}
+    refs["fp32"] = registry.publish(name, version, params, cfg, "fp32",
+                                    metrics=evaluate(params, cfg, 2))
+    qc_dyn = QuantConfig(mode="dynamic_int8", min_size=1024)
+    qp, _ = quantize_tree(params, qc_dyn)
+    refs["dynamic_int8"] = registry.publish(name, version, qp, cfg,
+                                            "dynamic_int8",
+                                            metrics=evaluate(qp, cfg, 2))
+    qc_st = QuantConfig(mode="static_int8", min_size=1024)
+    sess = CalibrationSession(params, qc_st)
+    key = jax.random.PRNGKey(7)
+    for i in range(calib_batches):
+        key, sub = jax.random.split(key)
+        b = vqi_batch(sub, cfg, TASK, 32)
+        jax.block_until_ready(forward(sess.instrumented_params, b, cfg)[0])
+    qp_st, _ = quantize_tree(params, qc_st, sess.act_scales())
+    refs["static_int8"] = registry.publish(name, version, qp_st, cfg,
+                                           "static_int8",
+                                           metrics=evaluate(qp_st, cfg, 2))
+    return refs
+
+
+# ------------------------------------------------------------------ #
+# Fleet inspection pipeline
+# ------------------------------------------------------------------ #
+def inspection_pipeline(agent: EdgeAgent, cfg: ModelConfig,
+                        hub: TelemetryHub):
+    """pre: pack captured patch embeddings; infer: on-device; post: decode
+    class tokens + push asset-condition update (paper Fig. 1 flow)."""
+    lay = TASK.vocab_layout(cfg)
+
+    def pre(raw):
+        return {"tokens": raw["tokens"], "frontend_embeds": raw["frontend_embeds"]}
+
+    def infer(batch):
+        t0 = time.perf_counter()
+        logits = agent.infer(batch)
+        infer.latency_ms = (time.perf_counter() - t0) * 1e3
+        return logits
+
+    def post(logits, raw):
+        off = cfg.n_frontend_tokens
+        a_log = logits[:, off, lay["asset0"]: lay["asset0"] + TASK.n_assets]
+        c_log = logits[:, off + 1, lay["cond0"]: lay["cond0"] + TASK.n_conditions]
+        a_prob = jax.nn.softmax(a_log, -1)
+        c_prob = jax.nn.softmax(c_log, -1)
+        out = []
+        for i, asset_id in enumerate(raw["asset_ids"]):
+            a_i = int(jnp.argmax(a_prob[i]))
+            c_i = int(jnp.argmax(c_prob[i]))
+            conf = float(jnp.minimum(jnp.max(a_prob[i]), jnp.max(c_prob[i])))
+            pred = {"asset_type": ASSET_TYPES[a_i], "condition": CONDITIONS[c_i]}
+            correct = None
+            if "asset" in raw:
+                correct = (a_i == int(raw["asset"][i])
+                           and c_i == int(raw["cond"][i]))
+            sample = None
+            if conf < hub.threshold or correct is False:
+                # feedback loop: ship the raw capture back for retraining
+                sample = {"frontend_embeds": raw["frontend_embeds"][i],
+                          "tokens": raw["tokens"][i],
+                          "labels": raw.get("labels", [None] * (i + 1))[i]
+                          if "labels" in raw else None}
+            hub.push(InferenceRecord(
+                device_id=agent.device_id,
+                model_key=agent.active.key,
+                latency_ms=infer.latency_ms / len(raw["asset_ids"]),
+                asset_id=asset_id, prediction=pred, confidence=conf,
+                correct=correct, sample=sample))
+            out.append(pred)
+        return out
+
+    return Pipeline(pre, infer, post)
+
+
+def make_fleet(registry: ArtifactRegistry, n_standard: int = 2,
+               n_constrained: int = 2) -> FleetOrchestrator:
+    """Heterogeneous fleet: standard devices (fp32-capable) + Pi-4-class
+    constrained devices that only admit int8 variants."""
+    hub = TelemetryHub()
+    orch = FleetOrchestrator(registry, telemetry=hub)
+    for i in range(n_standard):
+        orch.register_device(EdgeAgent(
+            f"edge-std-{i}", registry,
+            DeviceProfile("edge-standard", 8 * 1024**3)))
+    for i in range(n_constrained):
+        orch.register_device(EdgeAgent(
+            f"edge-pi4-{i}", registry,
+            DeviceProfile("edge-pi4-4gb", 4 * 1024**3,
+                          allowed_variants=("static_int8", "dynamic_int8"))))
+    return orch
+
+
+# ------------------------------------------------------------------ #
+# Closed MLOps loop: telemetry buffer -> retrain -> publish -> rollout
+# (the paper's Fig. 4 right-to-left feedback arrow, as executable code)
+# ------------------------------------------------------------------ #
+def retrain_from_telemetry(hub: TelemetryHub, params, cfg: ModelConfig,
+                           steps: int = 60, batch: int = 32,
+                           mix_fraction: float = 0.25, log_fn=print):
+    """Fine-tune on fresh synthetic data mixed with telemetry samples.
+
+    Buffered low-confidence captures are upsampled into every batch at
+    ``mix_fraction`` (replayed with labels from the inspection follow-up,
+    i.e. the batch generator here).
+    """
+    import jax.numpy as jnp
+
+    from repro.training.loop import fit
+    buffered = [r.sample for r in hub.retrain_buffer
+                if r.sample and r.sample.get("labels") is not None]
+
+    oc = OptimizerConfig(lr=5e-4, warmup_steps=5, total_steps=steps,
+                         weight_decay=0.01)
+
+    def stream():
+        key = jax.random.PRNGKey(99)
+        n_mix = int(batch * mix_fraction) if buffered else 0
+        while True:
+            key, sub = jax.random.split(key)
+            b = vqi_batch(sub, cfg, TASK, batch)
+            if n_mix:
+                key, pick = jax.random.split(key)
+                idx = jax.random.randint(pick, (n_mix,), 0, len(buffered))
+                fe = jnp.stack([buffered[int(i)]["frontend_embeds"]
+                                for i in idx])
+                tk = jnp.stack([buffered[int(i)]["tokens"] for i in idx])
+                lb = jnp.stack([buffered[int(i)]["labels"] for i in idx])
+                b = dict(b)
+                b["frontend_embeds"] = b["frontend_embeds"].at[:n_mix].set(fe)
+                b["tokens"] = b["tokens"].at[:n_mix].set(tk)
+                b["labels"] = b["labels"].at[:n_mix].set(lb)
+            yield {k: v for k, v in b.items()
+                   if k in ("tokens", "labels", "frontend_embeds")}
+
+    new_params, history = fit(cfg, oc, stream(), steps, params=params,
+                              log_fn=log_fn)
+    return new_params, {"replayed_samples": len(buffered),
+                        "final_loss": history[-1]["loss"]}

@@ -1,0 +1,66 @@
+"""int8-KV decode attention Pallas kernel (beyond-paper §Perf optimization).
+
+The paper quantizes *weights*; decode_32k is KV-cache-memory-bound, so we
+extend the same signed-int8 scheme to the KV cache. The kernel fuses
+dequantization into the attention dot, so HBM traffic for the cache is
+1 byte/elem (vs 2 for bf16) and the f32 dequantized cache never exists in
+HBM — only per-(slot, head) scales (S*H floats) are added.
+
+Layout: one grid cell per (batch, kv-head): the whole [S, hd] int8 K/V panel
+is staged in VMEM (32k x 128 int8 = 4 MB, well inside v5e VMEM).
+
+    q        [B, Hkv, G, hd]   (G = query heads per kv head)
+    k_i8/v_i8[B, S, Hkv, hd]   int8
+    k_s/v_s  [B, S, Hkv]       f32 per-slot-per-head scales
+    bias     [B, S]            additive mask (0 or -inf), ring-aware
+    out      [B, Hkv, G, hd]   f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, bias_ref, o_ref):
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)         # [S, hd] (int8 -> f32)
+    ks = ks_ref[0, :, 0]                           # [S]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    vs = vs_ref[0, :, 0]
+    bias = bias_ref[0]                             # [S]
+    hd = q.shape[-1]
+    scores = jax.lax.dot_general(                  # [G, S]
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    scores = scores * ks[None, :] / jnp.sqrt(hd).astype(jnp.float32)
+    scores = scores + bias[None, :]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    pv = p * vs[None, :]                           # fold v scales into probs
+    o_ref[0, 0] = jax.lax.dot_general(
+        pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qdecode_attention(q, k_i8, k_s, v_i8, v_s, bias, *, interpret: bool = False):
+    """q [B,Hkv,G,hd]; k_i8/v_i8 [B,S,Hkv,hd]; k_s/v_s [B,S,Hkv]; bias [B,S]."""
+    b, hkv, g, hd = q.shape
+    s = k_i8.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, s, 1, hd), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, s, 1, hd), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, s, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k_i8, k_s, v_i8, v_s, bias)

@@ -1,0 +1,48 @@
+"""Per-channel symmetric int8 weight-quantization Pallas kernel.
+
+Artifact-build-time kernel (quantize once, deploy many — the paper's Model
+Creation pane). Grid over output-channel blocks; each block stages the full
+[K, bn] column panel in VMEM, reduces absmax over K, scales and rounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 256
+
+
+def _kernel(w_ref, q_ref, scale_ref):
+    w = w_ref[...].astype(jnp.float32)                         # [K, bn]
+    absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True), 1e-12)
+    q_ref[...] = jnp.clip(jnp.round(w * (127.0 / absmax)),
+                          -127, 127).astype(jnp.int8)
+    scale_ref[...] = absmax / 127.0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_weights(w, *, interpret: bool = False):
+    """w [K, N] float -> (w_int8 [K, N], scale [1, N])."""
+    k, n = w.shape
+    bn = min(BN, n)
+    np_ = -(-n // bn) * bn
+    w = jnp.pad(w, ((0, 0), (0, np_ - n)), constant_values=1e-12)
+
+    q, scale = pl.pallas_call(
+        _kernel,
+        grid=(np_ // bn,),
+        in_specs=[pl.BlockSpec((k, bn), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((k, bn), lambda j: (0, j)),
+            pl.BlockSpec((1, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, np_), jnp.int8),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w)
+    return q[:, :n], scale[:, :n]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(w):
+    """Per-channel symmetric int8 weight quantization. w [K, N].
+
+    NOTE: quantization multiplies by the reciprocal scale (inv = 127/absmax)
+    rather than dividing — kernels do the same, so kernel == oracle exactly
+    even on .5-boundary quotients (common with bf16 inputs)."""
+    absmax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0,
+                                 keepdims=True), 1e-12)
+    inv = 127.0 / absmax
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) * inv), -127, 127)
+    return q.astype(jnp.int8), absmax / 127.0
+
+
+def qmatmul_static_ref(x, w_int8, w_scale, act_scale):
+    """Static w8a8: activation scale precomputed by calibration.
+
+    x [M, K] float; w_int8 [K, N]; w_scale [1, N]; act_scale scalar.
+    """
+    inv = 1.0 / act_scale
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * inv), -127, 127)
+    acc = jnp.dot(xq.astype(jnp.int8), w_int8, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (act_scale * w_scale)
+
+
+def qdecode_ref(q, k_i8, k_s, v_i8, v_s, bias):
+    """int8-KV decode attention oracle.
+
+    q [B,Hkv,G,hd]; k_i8/v_i8 [B,S,Hkv,hd] int8; k_s/v_s [B,S,Hkv]; bias [B,S].
+    """
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k_i8.astype(jnp.float32) * k_s[..., None]
+    vf = v_i8.astype(jnp.float32) * v_s[..., None]
+    scores = jnp.einsum("bkgh,bskh->bkgs", qf, kf) / jnp.sqrt(hd)
+    scores = scores + bias[:, None, None, :]
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bkgs,bskh->bkgh", p, vf)
+
+
+def quantize_kv_ref(t):
+    """[B,S,H,hd] -> (int8, scale [B,S,H]) per-slot-per-head symmetric."""
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def qmatmul_dynamic_ref(x, w_int8, w_scale):
+    """Dynamic w8a8: per-row activation scale computed at run time."""
+    absmax = jnp.maximum(
+        jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True), 1e-12)
+    inv = 127.0 / absmax
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * inv), -127, 127)
+    acc = jnp.dot(xq.astype(jnp.int8), w_int8, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * ((absmax / 127.0) * w_scale)

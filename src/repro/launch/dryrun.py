@@ -1,0 +1,313 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination with ShapeDtypeStruct stand-ins (no allocation), print
+memory/cost analysis, and record roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single multi --out experiments/dryrun
+
+Each result is written to <out>/<arch>__<shape>__<mesh>[__tag].json and
+skipped if already present (restartable batch).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ---- everything below may import jax ---------------------------------- #
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.launch import specs as S
+from repro.launch.mesh import (
+    HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh)
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes moved by collectives, from post-SPMD optimized HLO."""
+    by_op: Dict[str, int] = {op: 0 for op in _COLLECTIVES}
+    counts: Dict[str, int] = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or "-done" in line.split("=")[1][:60]:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        by_op[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    return {"bytes_by_op": by_op, "counts": counts,
+            "total_bytes": sum(by_op.values())}
+
+
+# --------------------------------------------------------------------- #
+# §Perf variants: cfg overrides and/or quantized (int8-weight) param trees.
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "": {},
+    "attnopt": {"cfg": {"opt_attn_accum": True}},
+    "int8w": {"quant": True},
+    "int8w-attnopt": {"cfg": {"opt_attn_accum": True}, "quant": True},
+    "accum2x": {"accum_mult": 2},
+    "accum4x": {"accum_mult": 4},
+    "fsdp": {"cfg": {"fsdp": True}},
+    "int8kv": {"cfg": {"kv_cache_int8": True, "opt_attn_accum": True}},
+    "int8all": {"cfg": {"kv_cache_int8": True, "opt_attn_accum": True},
+                "quant": True},
+    "mlaabsorb": {"cfg": {"opt_mla_absorb": True, "opt_attn_accum": True}},
+    "mlaabsorb-int8w": {"cfg": {"opt_mla_absorb": True,
+                                "opt_attn_accum": True}, "quant": True},
+    "moesharded": {"cfg": {"opt_moe_shardmap": True, "opt_attn_accum": True}},
+    # accum trade: FSDP weight-gather traffic scales with #microbatches,
+    # activation memory scales inversely
+    "moesharded-accum4": {"cfg": {"opt_moe_shardmap": True,
+                                  "opt_attn_accum": True, "grad_accum": 4}},
+    "moesharded-accum16": {"cfg": {"opt_moe_shardmap": True,
+                                   "opt_attn_accum": True, "grad_accum": 16}},
+}
+
+
+def qparam_structs(cfg: ModelConfig):
+    """Shapes of the dynamic-int8 artifact (weights-only quantization)."""
+    from repro.core.quant import QuantConfig, quantize_tree
+    from repro.models import init_params
+
+    def build(key):
+        params = init_params(key, cfg)
+        qp, _ = quantize_tree(params, QuantConfig("dynamic_int8"))
+        return qp
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def build_lowerable(cfg: ModelConfig, shape_name: str, mesh,
+                    quantized: bool = False):
+    """Returns (jitted_fn, arg_structs)."""
+    info = C.INPUT_SHAPES[shape_name]
+    kind = info["kind"]
+    b, s = info["global_batch"], info["seq_len"]
+    cfg = S.config_for_shape(cfg, shape_name)
+
+    # int8 artifacts are serving-side only (training differentiates weights)
+    quantized = quantized and kind != "train"
+    p_structs = qparam_structs(cfg) if quantized else S.param_structs(cfg)
+    p_shard = S.param_shardings(cfg, mesh, p_structs)
+
+    if kind == "train":
+        oc = OptimizerConfig()
+        o_structs = S.opt_structs(cfg, oc)
+        o_shard = S.opt_shardings(cfg, oc, mesh, o_structs=o_structs)
+        b_structs = S.batch_structs(cfg, b, s, train=True)
+        b_shard = S.batch_shardings(mesh, b_structs)
+        fn = functools.partial(train_step, cfg=cfg, oc=oc)
+        jitted = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        return jitted, (p_structs, o_structs, b_structs)
+    if kind == "prefill":
+        b_structs = S.batch_structs(cfg, b, s, train=False)
+        b_shard = S.batch_shardings(mesh, b_structs)
+        fn = functools.partial(prefill, cfg=cfg)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        return jitted, (p_structs, b_structs)
+    # decode: one new token against a seq_len cache
+    c_structs = S.cache_structs(cfg, b, s)
+    c_shard = S.cache_shardings(mesh, c_structs)
+    t_struct = S._token_struct(cfg, b, 1)
+    t_shard = S.batch_shardings(mesh, {"t": t_struct})["t"]
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    fn = functools.partial(decode_step, cfg=cfg)
+    jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, t_shard, pos_shard),
+                     donate_argnums=(1,))
+    return jitted, (p_structs, c_structs, t_struct, pos_struct)
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    info = C.INPUT_SHAPES[shape_name]
+    n = cfg.param_count(active_only=cfg.n_experts > 0)
+    if info["kind"] == "train":
+        d = info["global_batch"] * info["seq_len"]
+        return 6.0 * n * d
+    if info["kind"] == "prefill":
+        return 2.0 * n * info["global_batch"] * info["seq_len"]
+    return 2.0 * n * info["global_batch"]          # decode: 1 token/seq
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            tag: str = "", cfg_override=None,
+            hlo_save_path: str = "") -> Dict[str, Any]:
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.size
+    cfg = cfg_override or C.get_config(arch)
+    var = VARIANTS.get(tag, {})
+    if var.get("cfg"):
+        cfg = cfg.with_overrides(**var["cfg"])
+    if var.get("accum_mult"):
+        cfg = cfg.with_overrides(
+            grad_accum=max(cfg.grad_accum, 1) * var["accum_mult"])
+    quantized = bool(var.get("quant"))
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "n_devices": n_dev,
+        "params": cfg.param_count(),
+        "active_params": cfg.param_count(active_only=cfg.n_experts > 0),
+    }
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        jitted, structs = build_lowerable(cfg, shape_name, mesh,
+                                          quantized=quantized)
+        lowered = jitted.lower(*structs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+
+    # while-loop-aware analysis (cost_analysis counts scan bodies once —
+    # see launch/hlo_analysis.py); xla_cost_* kept as the raw cross-check.
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    ha = analyze_hlo(hlo)
+    coll = {"bytes_by_op": ha["collective_by_op"],
+            "counts": ha["collective_counts"],
+            "total_bytes": ha["collective_bytes"]}
+    if hlo_save_path:
+        import gzip
+
+        with gzip.open(hlo_save_path, "wt") as f:
+            f.write(hlo)
+
+    flops_dev = float(ha["flops"])
+    bytes_dev = float(ha["bytes"])
+    coll_dev = float(coll["total_bytes"])
+    mf = model_flops(S.config_for_shape(cfg, shape_name), shape_name)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS_BF16,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    rec.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "xla_cost_flops_once": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes_once": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes,
+            "hbm_per_chip": HBM_PER_CHIP,
+        },
+        "roofline": {
+            **terms,
+            "dominant": max(terms, key=terms.get),
+            "model_flops_total": mf,
+            "useful_flops_ratio": mf / max(flops_dev * n_dev, 1.0),
+        },
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = C.all_arch_ids() if args.arch == ["all"] else args.arch
+    shapes = list(C.INPUT_SHAPES) if args.shape == ["all"] else args.shape
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in args.mesh:
+                stem = f"{arch}__{shape}__{mesh_name}"
+                if args.tag:
+                    stem += f"__{args.tag}"
+                path = os.path.join(args.out, stem + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"SKIP {stem} (exists)", flush=True)
+                    continue
+                print(f"RUN  {stem} ...", flush=True)
+                try:
+                    rec = run_one(arch, shape, mesh_name, tag=args.tag,
+                                  hlo_save_path=os.path.join(
+                                      args.out, stem + ".hlo.gz"))
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(
+                        f"OK   {stem} compile={rec['compile_s']}s "
+                        f"flops/dev={rec['flops_per_device']:.3e} "
+                        f"mem={rec['memory']['peak_est_bytes']/1e9:.2f}GB "
+                        f"coll/dev={rec['collectives']['total_bytes']/1e9:.3f}GB "
+                        f"dominant={r['dominant']}", flush=True)
+                except Exception as e:  # noqa: BLE001 — batch keeps going
+                    failures.append(stem)
+                    err = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    with open(os.path.join(args.out, stem + ".FAILED.json"),
+                              "w") as f:
+                        json.dump(err, f, indent=1)
+                    print(f"FAIL {stem}: {e!r}", flush=True)
+    print(f"done; {len(failures)} failures: {failures}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Post-optimization HLO cost analysis with correct while-loop accounting.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which undercounts
+scan-over-layers models by ~n_layers x (verified in tests/test_hlo_analysis).
+This module parses the optimized HLO text and computes:
+
+    flops            matmul flops (dot ops), x trip count through while loops
+    bytes            HBM traffic at fusion granularity (operands + outputs of
+                     top-level instructions; fused computation internals stay
+                     in registers/VMEM), x trip count
+    collective_bytes output bytes of all-gather / all-reduce / reduce-scatter /
+                     all-to-all / collective-permute, x trip count
+
+Conventions (documented in EXPERIMENTS.md): flops counts dots only (the MFU
+convention — elementwise ops are excluded); trip counts come from the scan
+lowering pattern (induction var compared LT against a constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4, "pred": 1, "token": 0, "opaque": 0,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1, "f4e2m1fn": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# tuple shapes may contain /*index=N*/ comments, so match parens non-greedily
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\(.*?\)|\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS = ("calls=", "to_apply=", "body=", "condition=", "branch_computations=")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_info(shape_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Returns (total bytes, [(dtype, dims), ...])."""
+    total, parts = 0, []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dim_list = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in dim_list:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+        parts.append((dtype, dim_list))
+    return total, parts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    op: str
+    line: str
+    out_bytes: int
+    dims: List[List[int]]
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: Optional[Dict[str, float]] = None
+    collective_counts: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.collective_by_op is None:
+            self.collective_by_op = {c: 0.0 for c in _COLLECTIVES}
+        if self.collective_counts is None:
+            self.collective_counts = {c: 0.0 for c in _COLLECTIVES}
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k in _COLLECTIVES:
+            self.collective_by_op[k] += other.collective_by_op[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.instr_lines: Dict[str, Dict[str, str]] = {}
+        self.entry: Optional[str] = None
+        self._fused: set = set()
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ---------------------------------------------------------------- #
+    def _parse(self, text: str) -> None:
+        current = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            mc = _COMP_RE.match(line)
+            if mc and ("->" in line):
+                current = mc.group(1)
+                self.computations[current] = []
+                self.instr_lines[current] = {}
+                if raw.startswith("ENTRY"):
+                    self.entry = current
+                continue
+            if current is None:
+                continue
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            name, shape_str, op = mi.groups()
+            out_bytes, parts = _shape_info(shape_str)
+            self.computations[current].append(
+                Instr(name, shape_str, op, line, out_bytes,
+                      [p[1] for p in parts],
+                      is_root=line.lstrip().startswith("ROOT")))
+            self.instr_lines[current][name] = shape_str
+            for key in ("calls=", "to_apply=", "body=", "condition="):
+                for m in re.finditer(key + r"%?([\w.\-]+)", line):
+                    if key == "calls=" and op == "fusion":
+                        self._fused.add(m.group(1))
+
+    # ---------------------------------------------------------------- #
+    def _trip_count(self, cond_comp: str) -> int:
+        """Scan lowering compares the induction var LT a constant; the compare
+        may sit behind a wrapped/fused computation, so take the max integer
+        constant in the cond computation (scan conds contain only the bound)."""
+        consts = [1]
+        for ins in self.computations.get(cond_comp, []):
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                consts.append(int(m.group(1)))
+        return max(consts)
+
+    def _operand_bytes(self, comp: str, line: str) -> int:
+        """Sum of operand sizes (looked up from the defining instructions)."""
+        try:
+            args = line.split("(", 1)[1]
+        except IndexError:
+            return 0
+        args = args.split("), ")[0]
+        total = 0
+        table = self.instr_lines.get(comp, {})
+        for opn in _OPERAND_RE.findall(args):
+            if opn in table:
+                total += _shape_info(table[opn])[0]
+        return total
+
+    def _fusion_bytes(self, comp: str, ins: Instr, fused_comp: str) -> int:
+        """HBM bytes of a fusion = output + per-parameter effective reads.
+
+        A parameter whose only uses inside the fused computation are
+        (dynamic-)slice/gather ops is read only through those slices — this
+        is what keeps scan-over-layers from counting the whole stacked cache
+        once per layer (an L^2 overcount). In-place cache updates (fused
+        dynamic-update-slice whose buffer operand is a parameter feeding the
+        ROOT) alias the buffer: only the update region is written."""
+        fused_instrs0 = self.computations.get(fused_comp, [])
+        roots = [i for i in fused_instrs0 if i.is_root]
+        root_is_dus = bool(roots) and roots[0].op == "dynamic-update-slice"
+        if root_is_dus:
+            # written bytes = update region, not the whole aliased buffer
+            upd = self._operand_bytes(fused_comp, roots[0].line) - roots[0].out_bytes
+            total = max(upd, 0)
+        else:
+            total = ins.out_bytes
+        try:
+            args = ins.line.split("(", 1)[1].split(")", 1)[0]
+        except IndexError:
+            return total
+        operand_names = _OPERAND_RE.findall(args)
+        caller_table = self.instr_lines.get(comp, {})
+        fused_instrs = self.computations.get(fused_comp, [])
+        # parameter order == operand order
+        params = [i for i in fused_instrs if i.op == "parameter"]
+        params.sort(key=lambda i: int(re.search(r"parameter\((\d+)\)", i.line)
+                                      .group(1)) if re.search(
+                                          r"parameter\((\d+)\)", i.line) else 0)
+        for idx, p in enumerate(params):
+            full = (_shape_info(caller_table[operand_names[idx]])[0]
+                    if idx < len(operand_names)
+                    and operand_names[idx] in caller_table else p.out_bytes)
+            uses = [u for u in fused_instrs
+                    if u.name != p.name
+                    and re.search(r"%" + re.escape(p.name) + r"\b", u.line)]
+            if uses and all(u.op in ("dynamic-slice", "slice", "gather")
+                            for u in uses):
+                total += sum(u.out_bytes for u in uses)
+            elif (root_is_dus and uses
+                  and all(u.op == "dynamic-update-slice" and
+                          u.line.split("(", 1)[1].lstrip().startswith(
+                              "%" + p.name) for u in uses)):
+                pass  # aliased DUS buffer operand: not re-read
+            else:
+                total += full
+        return total
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        """2 * prod(out) * prod(lhs contracting dims)."""
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        args = ins.line.split("(", 1)[1]
+        first = _OPERAND_RE.search(args)
+        if not first:
+            return 0.0
+        lhs_shape = self.instr_lines.get(comp, {}).get(first.group(1))
+        if lhs_shape is None:
+            return 0.0
+        _, parts = _shape_info(lhs_shape)
+        if not parts:
+            return 0.0
+        lhs_dims = parts[0][1]
+        contract = [int(i) for i in m.group(1).split(",") if i] if m else []
+        k = 1
+        for ci in contract:
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+        out = 1
+        for dims in ins.dims:
+            for d in dims:
+                out *= d
+            break  # first (only) output shape
+        return 2.0 * out * k
+
+    # ---------------------------------------------------------------- #
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()           # break cycles defensively
+        total = Cost()
+        fused_ctx = comp in self._fused
+        for ins in self.computations.get(comp, []):
+            op = ins.op
+            if op == "dot":
+                total.flops += self._dot_flops(comp, ins)
+                if fused_ctx:
+                    pass                     # bytes counted at fusion boundary
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trip = self._trip_count(cond.group(1)) if cond else 1
+                if body:
+                    total.add(self.cost_of(body.group(1)), mult=trip)
+                continue
+            if op in ("call", "custom-call", "async-start"):
+                m = re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+                if m:
+                    total.add(self.cost_of(m.group(1)))
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if m:
+                    inner = self.cost_of(m.group(1))
+                    total.flops += inner.flops
+                    total.collective_bytes += inner.collective_bytes
+                    for k in _COLLECTIVES:
+                        total.collective_by_op[k] += inner.collective_by_op[k]
+                        total.collective_counts[k] += inner.collective_counts[k]
+                # fusion HBM traffic = output + effective operand reads
+                if not fused_ctx and m:
+                    total.bytes += self._fusion_bytes(comp, ins, m.group(1))
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"%?([\w.\-]+)",
+                                     ins.line.split("branch_computations=(")[-1]
+                                     .split(")")[0]) if \
+                        "branch_computations=" in ins.line else []:
+                    total.add(self.cost_of(m.group(1)))
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                total.collective_bytes += ins.out_bytes
+                total.collective_by_op[base] += ins.out_bytes
+                total.collective_counts[base] += 1
+            # HBM bytes at top-level instruction granularity.
+            # "copy" is excluded: the CPU backend materializes whole-cache
+            # copies inside scan bodies that TPU buffer-aliasing elides —
+            # counting them would swamp the real traffic (see EXPERIMENTS.md
+            # §Dry-run conventions).
+            if not fused_ctx and op not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "fusion", "copy"):
+                if op == "dynamic-slice":
+                    # reads only the sliced region, not the whole operand
+                    total.bytes += 2 * ins.out_bytes
+                elif op == "dynamic-update-slice":
+                    # writes only the update region (buffer is aliased)
+                    upd = self._operand_bytes(comp, ins.line) - ins.out_bytes
+                    total.bytes += 2 * max(upd, 0)
+                else:
+                    total.bytes += ins.out_bytes + self._operand_bytes(
+                        comp, ins.line)
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    cost = HloModule(text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collective_by_op": cost.collective_by_op,
+        "collective_counts": cost.collective_counts,
+    }

@@ -1,0 +1,33 @@
+"""Production mesh builders (v5e pods).
+
+16x16 = 256 chips/pod; multi-pod adds a leading "pod" axis (2 pods = 512).
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0) -> Mesh:
+    """Small mesh for CI tests (requires xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+# Hardware constants for the roofline report (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+PEAK_FLOPS_INT8 = 394e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+HBM_PER_CHIP = 16 * 1024**3    # 16 GiB

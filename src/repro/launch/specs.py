@@ -1,0 +1,114 @@
+"""ShapeDtypeStruct stand-ins + sharding assembly for the dry-run.
+
+``input_specs(cfg, shape_name)`` returns the exact argument pytree (as
+ShapeDtypeStructs — no allocation) for the step function that shape lowers:
+train_4k -> train_step, prefill_32k -> prefill, decode shapes -> decode_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.models.sharding import cache_spec, data_spec, param_specs
+from repro.training.optimizer import OptimizerConfig, adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_struct(cfg: ModelConfig, batch: int, seq: int) -> SDS:
+    if cfg.n_codebooks > 1:
+        return SDS((batch, seq, cfg.n_codebooks), jnp.int32)
+    return SDS((batch, seq), jnp.int32)
+
+
+def batch_structs(cfg: ModelConfig, batch: int, seq: int, *, train: bool
+                  ) -> Dict[str, SDS]:
+    s_text = seq - cfg.n_frontend_tokens
+    out = {"tokens": _token_struct(cfg, batch, s_text)}
+    if train:
+        out["labels"] = _token_struct(cfg, batch, s_text)
+    if cfg.frontend != "none":
+        out["frontend_embeds"] = SDS(
+            (batch, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return out
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_structs(cfg: ModelConfig, oc: OptimizerConfig):
+    p = param_structs(cfg)
+    return jax.eval_shape(functools.partial(adamw_init, oc=oc), p)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, seq: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, seq))
+
+
+# ------------------------------------------------------------------ #
+# Sharding assembly
+# ------------------------------------------------------------------ #
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, structs=None):
+    structs = structs or param_structs(cfg)
+    with jax.set_mesh(mesh):
+        specs = param_specs(cfg, structs)
+    return _named(mesh, specs)
+
+
+def opt_shardings(cfg: ModelConfig, oc: OptimizerConfig, mesh: Mesh,
+                  p_specs=None, o_structs=None):
+    """Moments inherit their param's spec; scales/step replicate."""
+    structs = o_structs or opt_structs(cfg, oc)
+    p_structs = param_structs(cfg)
+    with jax.set_mesh(mesh):
+        p_spec_tree = param_specs(cfg, p_structs)
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(p_spec_tree)[0]:
+        key = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = leaf
+
+    def rule(path, leaf):
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if parts[-1] in ("m", "v", "q") and parts[0] == "mu":
+            # mu/<param path>/m  (fp32)   or  mu/<param path>/m/q (int8)
+            pkey = tuple(p for p in parts[1:] if p not in ("m", "v", "q"))
+            spec = flat.get(pkey)
+            if spec is not None and len(spec) == leaf.ndim:
+                return spec
+        return P(*([None] * leaf.ndim))
+
+    spec_tree = jax.tree_util.tree_map_with_path(rule, structs)
+    return _named(mesh, spec_tree)
+
+
+def batch_shardings(mesh: Mesh, structs):
+    return _named(mesh, jax.tree.map(lambda l: data_spec(l.shape, mesh), structs))
+
+
+def cache_shardings(mesh: Mesh, structs):
+    return _named(mesh, jax.tree.map(lambda l: cache_spec(l.shape, mesh), structs))
+
+
+def shape_kind(shape_name: str) -> str:
+    return INPUT_SHAPES[shape_name]["kind"]
+
+
+def config_for_shape(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    if shape_name == "long_500k":
+        return cfg.for_long_context()
+    return cfg

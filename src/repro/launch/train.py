@@ -1,0 +1,61 @@
+"""Training launcher.
+
+Smoke scale (CPU, default):  streams synthetic LM data through the reduced
+config and trains for --steps.
+
+Production scale (--production): assembles the sharded train_step exactly as
+the dry-run does and AOT-compiles it for the 16x16 pod (requires the
+XLA_FLAGS device-count override; see repro.launch.dryrun which is the
+canonical entry point for that path).
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--production", action="store_true",
+                    help="lower+compile the full config on the pod mesh")
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    if args.production:
+        import os
+
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=512 "
+            + os.environ.get("XLA_FLAGS", ""))
+        from repro.launch.dryrun import run_one
+
+        rec = run_one(args.arch, "train_4k", "single")
+        print(json.dumps(rec["roofline"], indent=2))
+        print(json.dumps(rec["memory"], indent=2))
+        return
+
+    from repro import configs as C
+    from repro.data import lm_stream
+    from repro.training import OptimizerConfig, fit, save_checkpoint
+
+    cfg = C.smoke_config(args.arch)
+    oc = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                         total_steps=args.steps)
+    stream = lm_stream(cfg, args.batch, args.seq)
+    params, history = fit(cfg, oc, stream, args.steps)
+    print(f"final loss: {history[-1]['loss']:.4f}")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, cfg,
+                        meta={"history": history[-3:]})
+        print(f"saved to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,391 @@
+"""Attention mixers: GQA (full / sliding-window) and MLA (deepseek-v2).
+
+Prefill uses a chunked-query attention (scores materialized per q-chunk, never
+[S, S]) so 32k prefill fits; sliding-window prefill slices only the needed KV
+band per q-chunk, making compute O(S * window).
+
+Decode consumes a KV cache: full-attention caches hold seq_len entries,
+sliding-window caches are ring buffers of ``window`` entries (this is what
+makes long_500k decode sub-quadratic), MLA caches hold the compressed
+``c_kv``/``k_rope`` streams (kv_lora_rank = 512 per the paper).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, linear, rms_norm
+
+NEG_INF = -2.0e38
+Q_CHUNK = 512
+
+
+# ----------------------------------------------------------------------- #
+# GQA parameters
+# ----------------------------------------------------------------------- #
+def init_gqa_params(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, cfg.n_heads * hd), dtype=dt),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wo": dense_init(ko, (cfg.n_heads * hd, d), dtype=dt),
+    }
+
+
+def init_mla_params(key, cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, cfg.activation_dtype
+    qdim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], (d, cfg.kv_lora_rank), dtype=dt),
+        "w_kr": dense_init(ks[1], (d, cfg.qk_rope_dim), dtype=dt),
+        "w_ukv": dense_init(
+            ks[2], (cfg.kv_lora_rank, cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)),
+            dtype=dt,
+        ),
+        "wo": dense_init(ks[3], (cfg.n_heads * cfg.v_head_dim, d), dtype=dt),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dt),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[4], (d, cfg.q_lora_rank), dtype=dt)
+        p["w_uq"] = dense_init(ks[5], (cfg.q_lora_rank, cfg.n_heads * qdim), dtype=dt)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), dt)
+    else:
+        p["wq"] = dense_init(ks[4], (d, cfg.n_heads * qdim), dtype=dt)
+    return p
+
+
+# ----------------------------------------------------------------------- #
+# Chunked-query attention core
+# ----------------------------------------------------------------------- #
+def _score_einsum(spec, a, b, native: bool):
+    """Score matmul. native=True is the TPU idiom (bf16 operands, f32 MXU
+    accumulation via preferred_element_type); False reproduces the baseline
+    .astype(f32) pattern, which materializes converted operands (§Perf #1)."""
+    if native:
+        return jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+    return jnp.einsum(spec, a, b).astype(jnp.float32)
+
+
+def _attend_chunk(q, k, v, q_pos, k_pos, window: int,
+                  native_accum: bool = False) -> jax.Array:
+    """q: [B,C,Hq,hd]; k,v: [B,T,Hkv,hd]; *_pos: [C]/[T] absolute positions."""
+    hq, hkv = q.shape[2], k.shape[2]
+    group = hq // hkv
+    b, c, _, hd = q.shape
+    t = k.shape[1]
+    qg = q.reshape(b, c, hkv, group, hd)
+    scores = _score_einsum("bckgh,btkh->bkgct", qg, k, native_accum)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    rel = q_pos[:, None] - k_pos[None, :]                       # [C, T]
+    mask = rel >= 0
+    if window:
+        mask &= rel < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgct,btkh->bckgh", probs, v)
+    return out.reshape(b, c, hq, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def chunked_attention(q, k, v, positions, window: int = 0,
+                      native_accum: bool = False) -> jax.Array:
+    """Causal attention, scanned over query chunks of Q_CHUNK.
+
+    q [B,S,Hq,hd], k/v [B,S,Hkv,hd], positions [S] (contiguous arange).
+    For sliding windows only the [chunk_start - window, chunk_end) KV band is
+    sliced, so compute is O(S * (window + C)) instead of O(S^2).
+    """
+    b, s, hq, hd = q.shape
+    c = min(Q_CHUNK, s)
+    n_chunks = (s + c - 1) // c
+    pad = n_chunks * c - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = q.reshape(b, n_chunks, c, hq, hd).transpose(1, 0, 2, 3, 4)
+
+    band = 0
+    if window and window + c < s:
+        band = window + c  # KV slice length per chunk
+
+    def body(_, args):
+        i, qc = args
+        q0 = i * c
+        q_pos = q0 + jnp.arange(c)
+        if band:
+            start = jnp.clip(q0 + c - band, 0, s - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            k_pos = start + jnp.arange(band)
+        else:
+            kc, vc, k_pos = k, v, jnp.arange(s)
+        return None, _attend_chunk(qc, kc, vc, q_pos, k_pos, window,
+                                   native_accum=native_accum)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n_chunks), qs))
+    vd = out.shape[-1]  # v head dim may differ from q head dim (MLA)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * c, hq, vd)
+    return out[:, :s]
+
+
+# ----------------------------------------------------------------------- #
+# GQA prefill / decode
+# ----------------------------------------------------------------------- #
+def _ring_or_pad(t: jax.Array, s: int, window: int, pad_to: int) -> jax.Array:
+    """Convert prefill K/V [B, S, ...] into the decode cache layout.
+
+    window: ring buffer of exactly ``window`` slots (slot = pos % window);
+    else:   padded to ``pad_to`` slots (room for decode to append)."""
+    if window:
+        if window < s:
+            return jnp.roll(t[:, s - window:], -(s % window), axis=1)
+        if window > s:
+            pad = [(0, 0)] * t.ndim
+            pad[1] = (0, window - s)
+            return jnp.pad(t, pad)
+        return t
+    if pad_to > s:
+        pad = [(0, 0)] * t.ndim
+        pad[1] = (0, pad_to - s)
+        return jnp.pad(t, pad)
+    return t
+
+
+def _quantize_kv(t):
+    """[B,S,H,hd] -> (int8, scale [B,S,H]) per-slot-per-head symmetric."""
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
+                pad_to: int = 0):
+    """Returns (out [B,S,d], kv cache).
+
+    Cache is (k, v) [B,S_cache,Hkv,hd], or with cfg.kv_cache_int8 the 4-tuple
+    (k_i8, k_scale, v_i8, v_scale). With a window the cache is a ring buffer
+    of exactly ``window`` slots (entry for position t at slot t % window);
+    otherwise it is padded to ``pad_to`` so decode_step can append."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, positions, window=window,
+                            native_accum=cfg.opt_attn_accum)
+    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+    kc = _ring_or_pad(k, s, window, pad_to)
+    vc = _ring_or_pad(v, s, window, pad_to)
+    if cfg.kv_cache_int8:
+        kq, ks = _quantize_kv(kc)
+        vq, vs = _quantize_kv(vc)
+        return out, (kq, ks, vq, vs)
+    return out, (kc, vc)
+
+
+def _batched_update(cache, update, slots):
+    """Per-sequence cache write: cache [B,S,...], update [B,1,...],
+    slots [B] int — vmapped dynamic-update-slice along the seq dim."""
+    return jax.vmap(
+        lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s, axis=0)
+    )(cache, update, slots)
+
+
+def decode_positions(pos, b: int, s_cache: int, window: int):
+    """Normalizes pos (scalar or [B]) -> (pos_vec [B], slots_vec [B],
+    k_pos [B,S], valid [B,S]). Vector pos enables continuous batching where
+    every slot is at its own sequence position."""
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    slot_vec = pos_vec % s_cache if window else pos_vec
+    slots = jnp.arange(s_cache)
+    if window:
+        k_pos = pos_vec[:, None] - jnp.mod(pos_vec[:, None] - slots[None],
+                                           s_cache)
+    else:
+        k_pos = jnp.broadcast_to(slots[None], (b, s_cache))
+    valid = (k_pos >= 0) & (k_pos <= pos_vec[:, None])
+    if window:
+        valid &= (pos_vec[:, None] - k_pos) < window
+    return pos_vec, slot_vec, k_pos, valid
+
+
+def gqa_decode(p, x, cache_kv, pos, cfg: ModelConfig, window: int = 0):
+    """x [B,1,d]; cache_kv as returned by gqa_prefill; pos: scalar step or
+    per-sequence [B] positions (continuous batching)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    int8_kv = cfg.kv_cache_int8
+    if int8_kv:
+        k_cache, k_scale, v_cache, v_scale = cache_kv
+    else:
+        k_cache, v_cache = cache_kv
+    s_cache = k_cache.shape[1]
+    pos_vec, slot_vec, k_pos, valid = decode_positions(pos, b, s_cache, window)
+    pos_b = pos_vec[:, None]
+    q = linear(p["wq"], x).reshape(b, 1, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k = apply_rope(k, pos_b, cfg.rope_theta)
+    if int8_kv:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = _batched_update(k_cache, kq, slot_vec)
+        v_cache = _batched_update(v_cache, vq, slot_vec)
+        k_scale = _batched_update(k_scale, ks, slot_vec)
+        v_scale = _batched_update(v_scale, vs, slot_vec)
+    else:
+        k_cache = _batched_update(k_cache, k, slot_vec)
+        v_cache = _batched_update(v_cache, v, slot_vec)
+
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    if int8_kv:
+        from repro.kernels import ops  # fused-dequant decode attention
+
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        out = ops.qdecode(qg, k_cache, k_scale, v_cache, v_scale, bias)
+        out = out.astype(x.dtype).reshape(b, 1, hq * hd)
+        return linear(p["wo"], out), (k_cache, k_scale, v_cache, v_scale)
+    scores = _score_einsum("bkgh,btkh->bkgt", qg, k_cache, cfg.opt_attn_accum)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, v_cache).reshape(b, 1, hq * hd)
+    return linear(p["wo"], out), (k_cache, v_cache)
+
+
+# ----------------------------------------------------------------------- #
+# MLA prefill / decode (naive up-projection; absorbed variant in §Perf)
+# ----------------------------------------------------------------------- #
+def _mla_qkv(p, x, c_kv, k_rope, q_positions, kv_positions, cfg: ModelConfig):
+    b = x.shape[0]
+    sq, skv = x.shape[1], c_kv.shape[1]
+    nh, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(p["q_norm"], linear(p["w_dq"], x), cfg.norm_eps)
+        q = linear(p["w_uq"], cq).reshape(b, sq, nh, dn + dr)
+    else:
+        q = linear(p["wq"], x).reshape(b, sq, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, q_positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv = linear(p["w_ukv"], rms_norm(p["kv_norm"], c_kv, cfg.norm_eps))
+    kv = kv.reshape(b, skv, nh, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    kr = apply_rope(k_rope[:, :, None, :], kv_positions, cfg.rope_theta)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr, (b, skv, nh, dr))], axis=-1)
+    return q, k, v
+
+
+def mla_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
+                pad_to: int = 0):
+    b, s, _ = x.shape
+    c_kv = linear(p["w_dkv"], x)           # [B, S, kv_lora]
+    k_rope = linear(p["w_kr"], x)          # [B, S, qk_rope]
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope, positions, positions, cfg)
+    out = chunked_attention(q, k, v, positions, window=window,
+                            native_accum=cfg.opt_attn_accum)
+    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.v_head_dim))
+    return out, (_ring_or_pad(c_kv, s, window, pad_to),
+                 _ring_or_pad(k_rope, s, window, pad_to))
+
+
+def mla_decode_absorbed(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
+    """Weight-absorbed MLA decode (§Perf #2, deepseek-v2 decode_32k).
+
+    The naive path up-projects the whole compressed cache to per-head K/V
+    every step: O(S*H*(dn+dv)*rank) flops and a [B,S,H,dn+dr]
+    materialization. Absorbing W_uk into the query and W_uv into the output
+    scores directly against c_kv: O(S*H*rank) per step — ~(dn+dv)/rank-fold
+    less compute and no big intermediate.
+    """
+    b = x.shape[0]
+    nh, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    c_kv, k_rope = cache
+    s_cache = c_kv.shape[1]
+    pos_vec, slot_vec, k_pos, valid = decode_positions(pos, b, s_cache, window)
+    pos_b = pos_vec[:, None]
+
+    c_new = linear(p["w_dkv"], x)
+    kr_new = linear(p["w_kr"], x)
+    c_kv = _batched_update(c_kv, c_new, slot_vec)
+    k_rope = _batched_update(k_rope, kr_new, slot_vec)
+
+    if cfg.q_lora_rank:
+        cq = rms_norm(p["q_norm"], linear(p["w_dq"], x), cfg.norm_eps)
+        q = linear(p["w_uq"], cq).reshape(b, 1, nh, dn + dr)
+    else:
+        q = linear(p["wq"], x).reshape(b, 1, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos_b, cfg.rope_theta)[:, 0]      # [B,H,dr]
+
+    # absorb W_uk:  q_c[b,h,r] = q_nope[b,h,:] . W_uk[r,h,:]
+    w_ukv = p["w_ukv"]
+    if isinstance(w_ukv, dict):                                    # quantized
+        from repro.core.quant.quantize import dequantize_tensor
+
+        w_ukv = dequantize_tensor(w_ukv, x.dtype)
+    w_ukv = w_ukv.reshape(rank, nh, dn + dv)
+    w_uk, w_uv = w_ukv[..., :dn], w_ukv[..., dn:]
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
+                     preferred_element_type=jnp.float32)
+
+    ckv_n = rms_norm(p["kv_norm"], c_kv, cfg.norm_eps)             # [B,S,rank]
+    kr = apply_rope(k_rope[:, :, None, :], k_pos,
+                    cfg.rope_theta)[:, :, 0]                       # [B,S,dr]
+
+    scores = jnp.einsum("bhr,bsr->bhs", q_c.astype(x.dtype), ckv_n,
+                        preferred_element_type=jnp.float32)
+    scores = scores + jnp.einsum("bhd,bsd->bhs", q_rope, kr,
+                                 preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(dn + dr).astype(jnp.float32)
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bhs,bsr->bhr", probs.astype(x.dtype), ckv_n,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhr,rhd->bhd", ctx.astype(x.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(b, 1, nh * dv)
+    return linear(p["wo"], out), (c_kv, k_rope)
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
+    """cache = (c_kv [B,S,kv_lora], k_rope [B,S,dr]). Naive: re-up-project.
+
+    With ``window`` the cache is a ring buffer of ``window`` slots (long_500k).
+    With cfg.opt_mla_absorb the weight-absorbed path is used instead.
+    """
+    if cfg.opt_mla_absorb:
+        return mla_decode_absorbed(p, x, cache, pos, cfg, window=window)
+    b = x.shape[0]
+    c_kv, k_rope = cache
+    s_cache = c_kv.shape[1]
+    pos_vec, slot_vec, k_pos, valid = decode_positions(pos, b, s_cache, window)
+    pos_b = pos_vec[:, None]
+    c_new = linear(p["w_dkv"], x)
+    kr_new = linear(p["w_kr"], x)
+    c_kv = _batched_update(c_kv, c_new, slot_vec)
+    k_rope = _batched_update(k_rope, kr_new, slot_vec)
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope, pos_b, k_pos, cfg)
+    hd = q.shape[-1]
+    scores = _score_einsum("bqnh,btnh->bnqt", q, k, cfg.opt_attn_accum)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnqt,btnh->bqnh", probs, v)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.v_head_dim)
+    return linear(p["wo"], out), (c_kv, k_rope)

@@ -1,0 +1,182 @@
+"""Unified model configuration for every assigned architecture.
+
+One dataclass covers dense / MoE / SSM / hybrid / VLM / audio backbones so the
+rest of the framework (training, serving, quantization, dry-run) is
+arch-agnostic.  Each field maps to a knob named in the assignment table or the
+cited source paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str              # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    # ---- attention ----
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    attention: str = "full"     # full | sliding | mla | none
+    window: int = 0             # sliding-window size (attention == "sliding")
+    rope_theta: float = 10_000.0
+    # ---- MLA (deepseek-v2 family) ----
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # ---- FFN ----
+    d_ff: int = 0
+    # ---- MoE ----
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    d_ff_dense: int = 0         # FFN width of the leading dense layers
+    n_dense_layers: int = 0     # leading layers that use a dense FFN
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+    # ---- SSM (mamba2 SSD) ----
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # ---- hybrid (recurrentgemma / griffin) ----
+    layer_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    rglru_c: float = 8.0
+    # ---- modality frontend (stubbed per the carve-out) ----
+    frontend: str = "none"      # none | vision | audio
+    frontend_dim: int = 0       # embedding dim produced by the stub frontend
+    n_frontend_tokens: int = 0  # patch / conditioning tokens prepended
+    n_codebooks: int = 0        # audio codebooks (musicgen)
+    # ---- numerics / training ----
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    remat: bool = True
+    grad_accum: int = 1
+    # ---- long-context override (sub-quadratic variant for long_500k) ----
+    long_context_window: int = 4096
+    # ---- distribution ----
+    fsdp: bool = False          # additionally shard weight dim0 over "data"
+    # ---- §Perf knobs (EXPERIMENTS.md hillclimbs; defaults = baseline) ----
+    opt_attn_accum: bool = False   # bf16 operands + f32 MXU accumulation via
+                                   # preferred_element_type (kills the
+                                   # cache-convert churn seen in baseline HLO)
+    kv_cache_int8: bool = False    # signed-int8 KV cache with per-(slot,head)
+                                   # scales; decode uses the fused-dequant
+                                   # Pallas kernel (kernels/qdecode.py)
+    opt_mla_absorb: bool = False   # weight-absorbed MLA decode: score against
+                                   # the compressed c_kv stream directly
+                                   # instead of re-up-projecting the cache
+    opt_moe_shardmap: bool = False # shard_map MoE dispatch: local sort-based
+                                   # dispatch per data shard + explicit
+                                   # all_to_all over the expert (model) axis
+    # ---- provenance ----
+    source: str = ""
+
+    # ------------------------------------------------------------------ #
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.n_heads:
+            return self.d_model // self.n_heads
+        return 0
+
+    @property
+    def d_inner(self) -> int:
+        """Inner width of SSM / recurrent blocks."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_types(self) -> Tuple[str, ...]:
+        """Per-layer mixer type, length == n_layers."""
+        if self.arch_type == "ssm":
+            return ("ssm",) * self.n_layers
+        if self.layer_pattern:
+            pat = self.layer_pattern
+            return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+        return ("attn",) * self.n_layers
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.n_experts > 0 and i >= self.n_dense_layers
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def for_long_context(self) -> "ModelConfig":
+        """Sub-quadratic variant used only for the long_500k shape.
+
+        SSM / hybrid archs are already sub-quadratic; full-attention archs
+        switch to a sliding window (DESIGN.md long_500k policy).
+        """
+        if self.arch_type in ("ssm", "hybrid") or self.window:
+            return self
+        return self.with_overrides(window=self.long_context_window)
+
+    # Parameter count (for MODEL_FLOPS = 6*N*D roofline bookkeeping). ---- #
+    def param_count(self, active_only: bool = False) -> int:
+        d, hd = self.d_model, self.resolved_head_dim
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += d * self.vocab_size
+        if self.n_codebooks:
+            n += (self.n_codebooks - 1) * self.vocab_size * d  # extra heads+embeds
+        for i, lt in enumerate(self.layer_types()):
+            n += 2 * d  # norms
+            if lt == "attn":
+                if self.attention == "mla":
+                    qdim = self.qk_nope_dim + self.qk_rope_dim
+                    if self.q_lora_rank:
+                        n += d * self.q_lora_rank + self.q_lora_rank * self.n_heads * qdim
+                    else:
+                        n += d * self.n_heads * qdim
+                    n += d * self.kv_lora_rank + d * self.qk_rope_dim
+                    n += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                    n += self.n_heads * self.v_head_dim * d
+                else:
+                    n += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                    n += self.n_heads * hd * d
+            elif lt == "ssm":
+                din = self.d_inner
+                zxbcdt = 2 * din + 2 * self.ssm_ngroups * self.ssm_state + self.ssm_nheads
+                n += d * zxbcdt + din * d
+                n += self.conv_width * (din + 2 * self.ssm_ngroups * self.ssm_state)
+                n += 3 * self.ssm_nheads  # A, D, dt_bias
+            elif lt == "rec":
+                din = self.d_inner
+                n += 2 * d * din + din * d          # in x2 (branch+gate), out
+                n += self.conv_width * din           # conv
+                n += 2 * din * (din // 8) + 2 * din  # rg-lru gates (block-diag, 8 blocks)
+                n += din                             # lambda
+            # FFN
+            if lt != "ssm" and self.d_ff + self.d_ff_expert > 0:
+                if self.is_moe_layer(i):
+                    ff = self.d_ff_expert or self.d_ff
+                    n_e = (self.top_k if active_only else self.n_experts)
+                    n += n_e * 3 * d * ff
+                    n += self.n_shared_experts * 3 * d * ff
+                    n += d * self.n_experts  # router
+                else:
+                    ff = self.d_ff_dense or self.d_ff
+                    n += 3 * d * ff
+        return n

@@ -1,0 +1,95 @@
+"""Primitive layers shared by every architecture.
+
+``linear`` is quantization-aware: a weight leaf is either a plain array
+(fp32/bf16 path) or a dict produced by ``repro.core.quant.quantize_tree``:
+
+    {"w_int8": int8[K, N], "scale": f32[N] or f32[1,1]}            # dynamic
+    {"w_int8", "scale", "act_scale": f32[]}                        # static
+
+mirroring the paper's property that quantize/dequantize "maintains input and
+output shapes — the caller interaction does not change".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def is_quantized(p) -> bool:
+    return isinstance(p, dict) and ("w_int8" in p or "w_int4" in p)
+
+
+def linear(p, x: jax.Array) -> jax.Array:
+    """x: [..., K] @ weight [K, N] -> [..., N]; dispatches on quant state."""
+    if isinstance(p, dict) and "obs_id" in p:
+        from repro.core.quant.calibrate import observe  # calibration pass
+
+        observe(p["obs_session"], p["obs_id"], x)
+        return jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    if is_quantized(p):
+        grouped = p["scale"].ndim == (p.get("w_int8", p.get("w_int4"))).ndim + 1
+        if "w_int4" in p or grouped or "zero" in p:
+            # int4 / per-group / asymmetric: weight-only — dequantize
+            # in-register, matmul in activation dtype (HBM reads stay 4-8x
+            # smaller; the w8a8 kernels cover the plain-int8 fast path)
+            from repro.core.quant.quantize import dequantize_tensor
+
+            w = dequantize_tensor(p, x.dtype)
+            return jnp.einsum("...k,kn->...n", x, w)
+        from repro.kernels import ops  # local import: kernels are optional
+
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if "act_scale" in p:
+            y = ops.qmatmul_static(x2, p["w_int8"], p["scale"], p["act_scale"])
+        else:
+            y = ops.qmatmul_dynamic(x2, p["w_int8"], p["scale"])
+        return y.reshape(*lead, -1).astype(x.dtype)
+    return jnp.einsum("...k,kn->...n", x, p.astype(x.dtype))
+
+
+def rms_norm(w: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(wi, wo, x: jax.Array) -> jax.Array:
+    """Fused gate+up projection: wi [d, 2*ff], wo [ff, d]."""
+    gu = linear(wi, x)
+    g, u = jnp.split(gu, 2, axis=-1)
+    return linear(wo, jax.nn.silu(g) * u)
+
+
+# ----------------------------------------------------------------------- #
+# RoPE
+# ----------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (or [S])."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [B, S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# Initializers
+# ----------------------------------------------------------------------- #
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,228 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design notes (DESIGN.md §5): experts are sharded on the ``model`` mesh axis
+(expert parallelism). Dispatch avoids the [T, E, C] one-hot blow-up (E up to
+384 for kimi-k2) by sorting token->expert assignments and scattering into an
+[E * C, d] buffer — the scatter/gather pair is what lowers to all-to-all under
+GSPMD. Capacity dropping (factor ``cf``) matches the deepseek-v2 / kimi-k2
+training recipes; dropped tokens fall back to the shared experts + residual.
+
+Aux losses: switch-style load-balance loss and router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+
+def init_moe_params(key, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff_expert or cfg.d_ff
+    dt = cfg.activation_dtype
+    kr, kw, ko, ks1, ks2 = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, (d, cfg.n_experts), dtype=jnp.float32),
+        "wi": dense_init(kw, (cfg.n_experts, d, 2 * ff), in_axis=1, dtype=dt),
+        "wo": dense_init(ko, (cfg.n_experts, ff, d), in_axis=1, dtype=dt),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.n_shared_experts * ff
+        p["shared_wi"] = dense_init(ks1, (d, 2 * sff), dtype=dt)
+        p["shared_wo"] = dense_init(ks2, (sff, d), dtype=dt)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x: [B, S, d] -> (out [B, S, d], aux {lb_loss, z_loss, fraction_dropped}).
+
+    With cfg.opt_moe_shardmap (§Perf #1) and an ambient mesh, dispatch runs
+    inside shard_map: each expert shard selects and serves its own experts'
+    tokens locally and partial outputs combine with one psum — replacing the
+    GSPMD-lowered global scatter/gather that dominated the baseline
+    collective term (EXPERIMENTS.md §Perf).
+    """
+    if cfg.opt_moe_shardmap:
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is not None and "model" in (mesh.axis_names or ()):
+                return moe_ffn_sharded(p, x, cfg, mesh)
+        except Exception:
+            pass
+    return _moe_ffn_gspmd(p, x, cfg)
+
+
+def _moe_ffn_gspmd(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """Baseline: plain jnp dispatch, sharding left to GSPMD propagation."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = linear(p["router"], xt.astype(jnp.float32))           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                            # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)   # renormalize
+
+    # ---- aux losses -------------------------------------------------- #
+    me = probs.mean(0)                                             # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (t * k)
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- sort-based dispatch ----------------------------------------- #
+    cap = capacity(t, cfg)
+    flat_e = idx.reshape(-1)                                       # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e)                                    # stable
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k) - offsets[se]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)           # overflow slot
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xt[st])
+    ein = buf[: e * cap].reshape(e, cap, d)
+
+    # ---- expert FFN (batched over E; E sharded on "model") ----------- #
+    def expert_w(leaf):
+        """Weight-only int8 for experts: dequantize in-register (the batched
+        einsum keeps the MXU in bf16; HBM traffic still drops 4x)."""
+        if isinstance(leaf, dict) and ("w_int8" in leaf or "w_int4" in leaf):
+            from repro.core.quant.quantize import dequantize_tensor
+
+            return dequantize_tensor(leaf, x.dtype)
+        return leaf.astype(x.dtype)
+
+    gu = jnp.einsum("ecd,edf->ecf", ein, expert_w(p["wi"]))
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    eout = jnp.einsum("ecf,efd->ecd", h, expert_w(p["wo"]))
+
+    # ---- combine ------------------------------------------------------ #
+    flat_out = eout.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], flat_out[jnp.clip(slot, 0, e * cap - 1)], 0.0)
+    out = jnp.zeros((t, d), x.dtype).at[st].add(gathered * sg[:, None].astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        gu = linear(p["shared_wi"], xt)
+        g, u = jnp.split(gu, 2, axis=-1)
+        out = out + linear(p["shared_wo"], jax.nn.silu(g) * u)
+
+    aux = {
+        "lb_loss": lb_loss,
+        "z_loss": z_loss,
+        "fraction_dropped": 1.0 - keep.mean(),
+    }
+    return out.reshape(b, s, d), aux
+
+
+# --------------------------------------------------------------------- #
+# §Perf #1: shard_map dispatch (expert-parallel without global scatter)
+# --------------------------------------------------------------------- #
+def _local_moe(xl, router, wi, wo, cfg: ModelConfig, e_loc: int, shard: jax.Array):
+    """One (data x expert) shard's contribution.
+
+    xl [Bl, S, d] (replicated over the model axis), wi/wo hold this shard's
+    e_loc experts. Returns the partial output (sum over *local* experts only;
+    psum over "model" completes it) + aux scalars computed from local tokens.
+    """
+    bl, s, d = xl.shape
+    t = bl * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = xl.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # global expert ids
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (t * k)
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # keep only assignments owned by this expert shard
+    cap = capacity(t, cfg)
+    flat_e = idx.reshape(-1)
+    owned = (flat_e >= shard * e_loc) & (flat_e < (shard + 1) * e_loc)
+    loc_e = jnp.where(owned, flat_e - shard * e_loc, e_loc)  # e_loc = overflow
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(loc_e)
+    se, st, sg = loc_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros((e_loc + 1,), jnp.int32).at[se].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k) - offsets[se]
+    keep = (pos_in_e < cap) & (se < e_loc)
+    slot = jnp.where(keep, se * cap + pos_in_e, e_loc * cap)
+
+    buf = jnp.zeros((e_loc * cap + 1, d), xl.dtype).at[slot].set(xt[st])
+    ein = buf[: e_loc * cap].reshape(e_loc, cap, d)
+
+    gu = jnp.einsum("ecd,edf->ecf", ein, wi.astype(xl.dtype))
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    eout = jnp.einsum("ecf,efd->ecd", h, wo.astype(xl.dtype))
+
+    flat_out = eout.reshape(e_loc * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         flat_out[jnp.clip(slot, 0, e_loc * cap - 1)], 0.0)
+    out = jnp.zeros((t, d), xl.dtype).at[st].add(
+        gathered * sg[:, None].astype(xl.dtype))
+
+    owned_frac = jnp.where(owned, (~keep[jnp.argsort(order)]).astype(jnp.float32), 0.0)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+           "fraction_dropped": owned_frac.sum() / (t * k)}
+    return out.reshape(bl, s, d), aux
+
+
+def moe_ffn_sharded(p, x: jax.Array, cfg: ModelConfig, mesh) -> Tuple[jax.Array, dict]:
+    from jax.sharding import PartitionSpec as P
+
+    batch = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    n_shards = mesh.shape["model"]
+    e_loc = cfg.n_experts // n_shards
+
+    def body(xl, router, wi, wo):
+        shard = jax.lax.axis_index("model")
+        out, aux = _local_moe(xl, router, wi, wo, cfg, e_loc, shard)
+        out = jax.lax.psum(out, "model")          # combine expert shards
+        # aux identical across "model" (same tokens); average over data shards
+        aux = jax.tree.map(
+            lambda a: jax.lax.pmean(a, batch) if batch else a, aux)
+        # psum'd dropped fraction: sum over expert shards (each owns a subset)
+        aux["fraction_dropped"] = jax.lax.psum(aux["fraction_dropped"], "model")
+        return out, aux
+
+    in_specs = (P(batch, None, None), P(None, None),
+                P("model", None, None), P("model", None, None))
+    out_specs = (P(batch, None, None),
+                 {"lb_loss": P(), "z_loss": P(), "fraction_dropped": P()})
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
+    out, aux = fn(x, p["router"], p["wi"], p["wo"])
+
+    # shared experts stay in plain jnp: GSPMD's column-parallel partitioner
+    # handles the fused gate|up split correctly (a naive shard_map P(None,
+    # "model") spec on [d, 2*sff] would hand one shard all-gate / the other
+    # all-up)
+    if cfg.n_shared_experts:
+        b, s, d = x.shape
+        xt = x.reshape(-1, d)
+        gu = linear(p["shared_wi"], xt)
+        g, u = jnp.split(gu, 2, axis=-1)
+        out = out + linear(p["shared_wo"],
+                           jax.nn.silu(g) * u).reshape(b, s, d)
+    return out, aux

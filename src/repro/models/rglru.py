@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Recurrence:  r_t = sigmoid(Wa x_t),  i_t = sigmoid(Wx x_t)
+             a_t = exp(-c * softplus(lambda) * r_t)
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill uses lax.associative_scan (the recurrence is linear in h), decode is
+the O(1) step.  The gate projections are block-diagonal (8 blocks) as in the
+Griffin paper.  The full recurrent *block* is: conv1d + RG-LRU on one branch,
+GeLU gate on the other, multiplied, then out-projected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+N_BLOCKS = 8
+
+
+def init_rglru_params(key, cfg: ModelConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    bw = din // N_BLOCKS
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, din), dtype=dt),
+        "w_gate": dense_init(ks[1], (d, din), dtype=dt),
+        "w_out": dense_init(ks[2], (din, d), dtype=dt),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, din), dtype=dt),
+        "wa": dense_init(ks[4], (N_BLOCKS, bw, bw), in_axis=1, dtype=dt),
+        "wi": dense_init(ks[5], (N_BLOCKS, bw, bw), in_axis=1, dtype=dt),
+        "ba": jnp.zeros((din,), jnp.float32),
+        "bi": jnp.zeros((din,), jnp.float32),
+        # init so a^(1/c) ~ U[0.9, 0.999] as in the paper
+        "lam": jnp.linspace(0.5, 4.0, din, dtype=jnp.float32),
+    }
+
+
+def _block_diag(w, x):
+    """x [..., din] @ block-diag w [NB, bw, bw] -> [..., din]."""
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, N_BLOCKS, -1)
+    out = jnp.einsum("...nb,nbc->...nc", xb, w.astype(x.dtype))
+    return out.reshape(*lead, -1)
+
+
+def _gates(p, x, cfg: ModelConfig):
+    """Returns (a [..., din] in f32, gated input u [..., din] in f32)."""
+    r = jax.nn.sigmoid(_block_diag(p["wa"], x).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(_block_diag(p["wi"], x).astype(jnp.float32) + p["bi"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x.astype(jnp.float32))
+    return a, u
+
+
+def rglru_scan(p, x: jax.Array, cfg: ModelConfig, h0=None):
+    """x [B,S,din] -> (y [B,S,din], h_final [B,din]). Associative scan over S."""
+    a, u = _gates(p, x, cfg)
+    if h0 is not None:
+        # fold initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        u = jnp.concatenate([h0[:, None].astype(jnp.float32), u], axis=1)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block_prefill(p, x: jax.Array, cfg: ModelConfig):
+    """x [B,S,d] -> (out [B,S,d], cache=(h [B,din], conv_state [B,W-1,din]))."""
+    b, s, _ = x.shape
+    w = cfg.conv_width
+    xin = linear(p["w_x"], x)                                   # [B,S,din]
+    gate = jax.nn.gelu(linear(p["w_gate"], x))
+    # causal depthwise conv
+    xp = jnp.pad(xin, ((0, 0), (w - 1, 0), (0, 0)))
+    conv = sum(xp[:, i : i + s] * p["conv_w"][i][None, None] for i in range(w))
+    y, h = rglru_scan(p, conv, cfg)
+    out = linear(p["w_out"], y * gate)
+    conv_state = xin[:, s - (w - 1):] if s >= w - 1 else jnp.pad(
+        xin, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    return out, (h, conv_state)
+
+
+def rglru_block_decode(p, x: jax.Array, cache, cfg: ModelConfig):
+    """x [B,1,d]; cache=(h [B,din], conv_state [B,W-1,din])."""
+    h, conv_state = cache
+    xin = linear(p["w_x"], x)[:, 0]                              # [B,din]
+    gate = jax.nn.gelu(linear(p["w_gate"], x))[:, 0]
+    window = jnp.concatenate([conv_state, xin[:, None]], axis=1)  # [B,W,din]
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype))
+    a, u = _gates(p, conv, cfg)
+    h = (a * h.astype(jnp.float32) + u).astype(x.dtype)
+    out = linear(p["w_out"], (h * gate)[:, None])
+    return out, (h, window[:, 1:])

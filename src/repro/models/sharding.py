@@ -1,0 +1,161 @@
+"""Logical-axis sharding rules (DESIGN.md §5).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+Batch-like logical axes map to every non-model axis; tensor-parallel axes map
+to "model"; MoE expert dims map to "model" (expert parallelism); big archs
+additionally shard weight input dims over "data" (FSDP).
+
+Everything is *shape-checked*: an axis is only assigned if the dim is
+divisible by the mesh-axis size, so the same rules serve the 2-device test
+mesh and the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(shape, dim: int, mesh: Mesh, axes) -> bool:
+    return dim < len(shape) and shape[dim] % _axis_size(mesh, axes) == 0
+
+
+def checked_spec(shape, mesh: Mesh, *entries) -> P:
+    """Build a PartitionSpec, dropping any entry whose dim isn't divisible."""
+    out = []
+    for i, e in enumerate(entries):
+        out.append(e if e and _fits(shape, i, mesh, e) else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------------- #
+# Parameter rules: ordered (regex on tree path, spec entries builder)
+# --------------------------------------------------------------------- #
+def _param_rule(path: str, shape, mesh: Mesh, cfg: ModelConfig) -> P:
+    b = batch_axes(mesh)
+    fsdp = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    nd = len(shape)
+
+    # quantized leaves: w_int8 shards like its parent weight; scales replicate
+    if path.endswith(("/w_int8", "/w_int4")):
+        path = path[: -len("/w_int8")]
+    elif re.search(r"/(scale|act_scale|zero)$", path):
+        return P(*([None] * nd))
+
+    def spec(*tail):
+        """Pad with leading Nones for stacked-layer dims."""
+        lead = (None,) * (nd - len(tail))
+        return checked_spec(shape, mesh, *lead, *tail)
+
+    if re.search(r"(embed|extra_embeds)$", path):
+        return spec("model", fsdp)                    # [V, d] vocab-parallel
+    if re.search(r"(unembed|out_heads)$", path):
+        return spec(fsdp, "model")                    # [d, V]
+    if re.search(r"moe/(wi|wo)$", path):
+        return spec("model", fsdp, None)              # [E, ., .] expert-parallel
+    if re.search(r"router$", path):
+        return spec(None, None)
+    if re.search(r"(wq|wk|wv|w_uq|w_ukv|wi|w_in|w_x|w_gate|shared_wi|frontend_proj)$", path):
+        return spec(fsdp, "model")                    # column-parallel [d, X]
+    if re.search(r"(wo|w_out|shared_wo)$", path):
+        return spec("model", fsdp)                    # row-parallel [X, d]
+    if re.search(r"(w_dq|w_dkv|w_kr)$", path):
+        return spec(fsdp, None)                       # low-rank down-proj
+    if re.search(r"conv_w$", path):
+        return spec(None, "model")                    # [W, C] channel-parallel
+    if re.search(r"(A_log|D|dt_bias)$", path):
+        return spec("model")                          # per-head [H]
+    if re.search(r"(wa|wi_gate)$", path) and nd >= 3:
+        return spec(None, None, None)                 # block-diag gates: replicate
+    return P(*([None] * nd))                          # norms, biases, lam, ...
+
+
+def param_specs(cfg: ModelConfig, shapes) -> "jax.tree_util.PyTreeDef":
+    """shapes: pytree of ShapeDtypeStruct (jax.eval_shape of init)."""
+    mesh = _ambient_mesh()
+
+    def rule(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return _param_rule(pstr, leaf.shape, mesh, cfg)
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+# --------------------------------------------------------------------- #
+# Batch / cache / activation specs
+# --------------------------------------------------------------------- #
+def data_spec(shape, mesh: Mesh) -> P:
+    """Batch-first arrays: [B, ...] -> batch on every non-model axis."""
+    b = batch_axes(mesh)
+    return checked_spec(shape, mesh, b, *([None] * (len(shape) - 1)))
+
+
+def cache_spec(shape, mesh: Mesh, stacked: bool = True) -> P:
+    """Cache leaves are [L, B, ...] (stacked) — greedy assignment:
+    batch axes to the batch dim if divisible, then "model" to the largest
+    remaining divisible dim (kv-heads, seq, or channel)."""
+    b = batch_axes(mesh)
+    entries: list = [None] * len(shape)
+    bdim = 1 if stacked else 0
+    if _fits(shape, bdim, mesh, b):
+        entries[bdim] = b
+    # place "model" on the largest divisible remaining dim (prefer later dims)
+    cand = [
+        (shape[i], i)
+        for i in range(bdim + 1, len(shape))
+        if shape[i] % _axis_size(mesh, "model") == 0 and shape[i] >= _axis_size(mesh, "model")
+    ]
+    if cand:
+        _, i = max(cand)
+        entries[i] = "model"
+    return P(*entries)
+
+
+def cache_specs(mesh: Mesh, cache_shapes):
+    return jax.tree.map(lambda l: cache_spec(l.shape, mesh), cache_shapes)
+
+
+def _ambient_mesh() -> Mesh:
+    m = jax.sharding.get_abstract_mesh()
+    return m
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """Sharding constraint that is a no-op outside a mesh context.
+
+    Entries use logical names: "batch" -> all non-model axes, "model".
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+    except Exception:
+        return x
+    resolved = []
+    for e in entries:
+        if e == "batch":
+            resolved.append(batch_axes(mesh))
+        else:
+            resolved.append(e)
+    spec = checked_spec(x.shape, mesh, *resolved)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,220 @@
+"""Mamba2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Train/prefill uses the chunked SSD algorithm (intra-chunk quadratic block +
+inter-chunk state recurrence via lax.scan); decode is the O(1) recurrent
+step.  ``tests/test_ssm.py`` property-checks chunked SSD against the
+sequential recurrence oracle.
+
+Layout: x [B, L, H, P], B/C [B, L, G, N], dt [B, L, H]; state [B, H, P, N].
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear, rms_norm
+
+
+def init_ssm_params(key, cfg: ModelConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = din + 2 * g * n
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * din + 2 * g * n + h
+    return {
+        "w_in": dense_init(ks[0], (d, d_in_proj), dtype=dt),
+        "w_out": dense_init(ks[1], (din, d), dtype=dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, conv_dim), dtype=dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((din,), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x [B, L, C], w [W, C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out)
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    din, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * g * n]
+    dt = zxbcdt[..., 2 * din + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x [..., Q] -> lower-triangular pairwise segment sums [..., Q, Q]."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk: int, h0=None):
+    """Chunked SSD. Returns (y [B,L,H,P], final_state [B,H,P,N]).
+
+    x [B,L,H,P] (pre-multiplied by nothing; dt applied inside),
+    dt [B,L,H] (post-softplus), a_log [H] (A = -exp(a_log)),
+    b_mat/c_mat [B,L,G,N] with H % G == 0.
+    """
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, l)
+    nc = l // q
+    assert nc * q == l, f"seq {l} not divisible by chunk {q}"
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                     # [H]
+    dt = dt.astype(jnp.float32)
+    da = dt * a[None, None, :]                                  # [B,L,H]
+
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    dar = da.reshape(bsz, nc, q, h)
+    br = jnp.repeat(b_mat.reshape(bsz, nc, q, g, n), rep, axis=3)  # [B,nc,Q,H,N]
+    cr = jnp.repeat(c_mat.reshape(bsz, nc, q, g, n), rep, axis=3)
+
+    da_cs = jnp.cumsum(dar, axis=2)                             # [B,nc,Q,H]
+
+    # intra-chunk (diagonal block)
+    decay = jnp.exp(_segsum(dar.transpose(0, 1, 3, 2)))         # [B,nc,H,Q,Q]
+    xdt = xr * dtr[..., None].astype(x.dtype)
+    y_diag = jnp.einsum(
+        "bcqhn,bckhn,bchqk,bckhp->bcqhp",
+        cr.astype(jnp.float32), br.astype(jnp.float32),
+        decay, xdt.astype(jnp.float32),
+    )
+
+    # per-chunk input states
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)         # [B,nc,Q,H]
+    states = jnp.einsum(
+        "bckhn,bckh,bckhp->bchpn",
+        br.astype(jnp.float32), decay_states, xdt.astype(jnp.float32),
+    )                                                            # [B,nc,H,P,N]
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                    # [B,nc,H]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        s_c, d_c = inp                                           # [B,H,P,N], [B,H]
+        new = carry * d_c[..., None, None] + s_c
+        return new, carry                                        # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # [B,nc,H,P,N]
+
+    # contribution of carried state to each position
+    state_decay = jnp.exp(da_cs)                                 # [B,nc,Q,H]
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", cr.astype(jnp.float32), prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_sequential(x, dt, a_log, b_mat, c_mat, h0=None):
+    """Oracle: per-timestep recurrence (used by tests and decode)."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                   # [B,H,P], [B,H], [B,G,N] x2
+        bt = jnp.repeat(bt, rep, axis=1)
+        ct = jnp.repeat(ct, rep, axis=1)
+        da = jnp.exp(dtt * a[None])             # [B,H]
+        state = state * da[..., None, None] + jnp.einsum(
+            "bhp,bh,bhn->bhpn", xt.astype(jnp.float32), dtt.astype(jnp.float32), bt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b_mat.transpose(1, 0, 2, 3), c_mat.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+# ----------------------------------------------------------------------- #
+# Block-level prefill / decode
+# ----------------------------------------------------------------------- #
+def ssm_prefill(p, x: jax.Array, cfg: ModelConfig):
+    """x [B,S,d] -> (out [B,S,d], cache=(ssm_state, conv_state))."""
+    bsz, s, _ = x.shape
+    din, h, pd = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n, w = cfg.ssm_ngroups, cfg.ssm_state, cfg.conv_width
+
+    zxbcdt = linear(p["w_in"], x)
+    z, xbc_raw, dt = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"])
+    xi = xbc[..., :din].reshape(bsz, s, h, pd)
+    b_mat = xbc[..., din : din + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., din + g * n :].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk == 0:
+        y, state = ssd_chunked(xi, dt, p["A_log"], b_mat, c_mat, chunk)
+    else:  # smoke-test path for odd lengths
+        y, state = ssd_sequential(xi, dt, p["A_log"], b_mat, c_mat)
+    y = y + xi * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, din)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear(p["w_out"], y)
+    # conv state: last (w-1) pre-conv inputs
+    conv_state = xbc_raw[:, s - (w - 1):, :] if s >= w - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    return out, (state, conv_state)
+
+
+def ssm_decode(p, x: jax.Array, cache, cfg: ModelConfig):
+    """x [B,1,d]; cache=(state [B,H,P,N], conv_state [B,W-1,convdim])."""
+    bsz = x.shape[0]
+    din, h, pd = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n, w = cfg.ssm_ngroups, cfg.ssm_state, cfg.conv_width
+    state, conv_state = cache
+
+    zxbcdt = linear(p["w_in"], x)[:, 0]                          # [B, ·]
+    z, xbc_new, dt = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([conv_state, xbc_new[:, None]], axis=1)  # [B,W,C]
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype)))
+    xi = xbc[..., :din].reshape(bsz, h, pd)
+    b_vec = xbc[..., din : din + g * n].reshape(bsz, g, n)
+    c_vec = xbc[..., din + g * n :].reshape(bsz, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+
+    rep = h // g
+    b_h = jnp.repeat(b_vec, rep, axis=1)
+    c_h = jnp.repeat(c_vec, rep, axis=1)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None])                                   # [B,H]
+    state = state * da[..., None, None] + jnp.einsum(
+        "bhp,bh,bhn->bhpn", xi.astype(jnp.float32), dt, b_h.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_h.astype(jnp.float32)).astype(x.dtype)
+    y = y + xi * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, 1, din)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z)[:, None], cfg.norm_eps)
+    out = linear(p["w_out"], y)
+    return out, (state, window[:, 1:])

@@ -1,0 +1,417 @@
+"""Composable decoder assembly for all assigned architectures.
+
+Param tree (stacked for scan-over-layers, DESIGN.md §3):
+    embed [V, d]              (+ extra_embeds [K-1, V, d] for audio codebooks)
+    frontend_proj [fd, d]     (VLM / audio stub projector)
+    head_layers               (MoE archs: leading dense-FFN blocks, stacked)
+    layers                    (homogeneous main stack, stacked over L)
+    groups / tail             (hybrid: (rec, rec, attn) triples + remainder)
+    final_norm [d], unembed [d, V] (+ out_heads [K-1, d, V])
+
+Three entry points, all pure:
+    forward(params, batch, cfg)                 -> (logits, aux)   # teacher-forced
+    prefill(params, batch, cfg)                 -> (logits, cache)
+    decode_step(params, cache, tokens, pos, cfg)-> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rec_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, embed_init, linear, rms_norm, swiglu
+from repro.models.sharding import constrain
+
+ZERO_AUX = lambda: {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+                    "fraction_dropped": jnp.float32(0)}
+
+
+# ===================================================================== #
+# Init
+# ===================================================================== #
+def _init_mlp(key, cfg: ModelConfig, d_ff: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    d, dt = cfg.d_model, cfg.activation_dtype
+    return {"wi": dense_init(k1, (d, 2 * d_ff), dtype=dt),
+            "wo": dense_init(k2, (d_ff, d), dtype=dt)}
+
+
+def _init_attn_block(key, cfg: ModelConfig, moe: bool) -> dict:
+    ka, kf = jax.random.split(key)
+    dt = cfg.activation_dtype
+    blk = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    blk["attn"] = (attn.init_mla_params(ka, cfg) if cfg.attention == "mla"
+                   else attn.init_gqa_params(ka, cfg))
+    if cfg.d_ff + cfg.d_ff_expert > 0:
+        blk["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        if moe:
+            blk["moe"] = moe_mod.init_moe_params(kf, cfg)
+        else:
+            blk["mlp"] = _init_mlp(kf, cfg, cfg.d_ff_dense or cfg.d_ff)
+    return blk
+
+
+def _init_ssm_block(key, cfg: ModelConfig) -> dict:
+    return {"ln1": jnp.zeros((cfg.d_model,), cfg.activation_dtype),
+            "ssm": ssm_mod.init_ssm_params(key, cfg)}
+
+
+def _init_rec_block(key, cfg: ModelConfig) -> dict:
+    kr, kf = jax.random.split(key)
+    dt = cfg.activation_dtype
+    return {"ln1": jnp.zeros((cfg.d_model,), dt),
+            "rec": rec_mod.init_rglru_params(kr, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": _init_mlp(kf, cfg, cfg.d_ff)}
+
+
+def _stacked(init_fn, key, n: int):
+    if n == 0:
+        return None
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def hybrid_split(cfg: ModelConfig) -> Tuple[int, int]:
+    """(#full (rec,rec,attn) groups, #remainder rec layers)."""
+    pat = len(cfg.layer_pattern) or 1
+    return cfg.n_layers // pat, cfg.n_layers % pat
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = cfg.activation_dtype
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size), dtype=dt)
+    if cfg.n_codebooks > 1:
+        p["extra_embeds"] = jax.vmap(
+            lambda k: embed_init(k, (cfg.vocab_size, cfg.d_model), dt)
+        )(jax.random.split(keys[2], cfg.n_codebooks - 1))
+        p["out_heads"] = jax.vmap(
+            lambda k: dense_init(k, (cfg.d_model, cfg.vocab_size), dtype=dt)
+        )(jax.random.split(keys[3], cfg.n_codebooks - 1))
+    if cfg.frontend != "none":
+        fd = cfg.frontend_dim
+        p["frontend_proj"] = dense_init(keys[4], (fd, cfg.d_model), dtype=dt)
+
+    if cfg.arch_type == "hybrid":
+        n_groups, n_tail = hybrid_split(cfg)
+        def init_group(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"rec1": _init_rec_block(k1, cfg),
+                    "rec2": _init_rec_block(k2, cfg),
+                    "attn": _init_attn_block(k3, cfg, moe=False)}
+        p["groups"] = _stacked(init_group, keys[5], n_groups)
+        if n_tail:
+            p["tail"] = _stacked(lambda k: _init_rec_block(k, cfg), keys[6], n_tail)
+    elif cfg.arch_type == "ssm":
+        p["layers"] = _stacked(lambda k: _init_ssm_block(k, cfg), keys[5], cfg.n_layers)
+    elif cfg.n_experts > 0:
+        nd = cfg.n_dense_layers
+        if nd:
+            p["head_layers"] = _stacked(
+                lambda k: _init_attn_block(k, cfg, moe=False), keys[6], nd)
+        p["layers"] = _stacked(
+            lambda k: _init_attn_block(k, cfg, moe=True), keys[5], cfg.n_layers - nd)
+    else:
+        p["layers"] = _stacked(
+            lambda k: _init_attn_block(k, cfg, moe=False), keys[5], cfg.n_layers)
+    return p
+
+
+# ===================================================================== #
+# Block application
+# ===================================================================== #
+def _attn_window(cfg: ModelConfig) -> int:
+    # window == 0 means full attention; configs set window for sliding /
+    # hybrid-local archs, and for_long_context() sets it for long_500k.
+    return cfg.window
+
+
+def _apply_attn_block(lp, x, cfg: ModelConfig, *, moe: bool, mode: str,
+                      cache=None, positions=None, pos=None, pad_to=0):
+    window = _attn_window(cfg)
+    h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        if cfg.attention == "mla":
+            a_out, new_cache = attn.mla_decode(lp["attn"], h, cache, pos, cfg,
+                                               window=window)
+        else:
+            a_out, new_cache = attn.gqa_decode(lp["attn"], h, cache, pos, cfg,
+                                               window=window)
+    else:
+        if cfg.attention == "mla":
+            a_out, new_cache = attn.mla_prefill(lp["attn"], h, positions, cfg,
+                                                window=window, pad_to=pad_to)
+        else:
+            a_out, new_cache = attn.gqa_prefill(lp["attn"], h, positions, cfg,
+                                                window=window, pad_to=pad_to)
+    x = constrain(x + a_out, "batch", None, None)
+    aux = ZERO_AUX()
+    if "ln2" in lp:
+        h2 = rms_norm(lp["ln2"], x, cfg.norm_eps)
+        if moe:
+            f_out, aux = moe_mod.moe_ffn(lp["moe"], h2, cfg)
+        else:
+            f_out = swiglu(lp["mlp"]["wi"], lp["mlp"]["wo"], h2)
+        x = constrain(x + f_out, "batch", None, None)
+    return x, new_cache, aux
+
+
+def _apply_ssm_block(lp, x, cfg: ModelConfig, *, mode: str, cache=None):
+    h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        out, new_cache = ssm_mod.ssm_decode(lp["ssm"], h, cache, cfg)
+    else:
+        out, new_cache = ssm_mod.ssm_prefill(lp["ssm"], h, cfg)
+    return constrain(x + out, "batch", None, None), new_cache, ZERO_AUX()
+
+
+def _apply_rec_block(lp, x, cfg: ModelConfig, *, mode: str, cache=None):
+    h = rms_norm(lp["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        out, new_cache = rec_mod.rglru_block_decode(lp["rec"], h, cache, cfg)
+    else:
+        out, new_cache = rec_mod.rglru_block_prefill(lp["rec"], h, cfg)
+    x = constrain(x + out, "batch", None, None)
+    h2 = rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + swiglu(lp["mlp"]["wi"], lp["mlp"]["wo"], h2)
+    return x, new_cache, ZERO_AUX()
+
+
+def _acc_aux(a, b):
+    return jax.tree.map(lambda u, v: u + v, a, b)
+
+
+def _run_stack(stack, x, cfg: ModelConfig, block_fn, *, mode: str,
+               caches=None, remat: bool):
+    """Scan a homogeneous stacked block over the sequence of layers."""
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        xc, aux = carry
+        lp, cache = xs if has_cache else (xs, None)
+        xc, new_cache, aux_l = block_fn(lp, xc, cache)
+        return (xc, _acc_aux(aux, aux_l)), new_cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (stack, caches) if has_cache else stack
+    (x, aux), new_caches = jax.lax.scan(body, (x, ZERO_AUX()), xs)
+    return x, new_caches, aux
+
+
+# ===================================================================== #
+# Embedding / head
+# ===================================================================== #
+def _take_embed(leaf, tokens, dtype):
+    """Embedding gather, aware of quantized ({"w_int8","scale"}) and
+    calibration-observer ({"w",...}) leaves. int8 rows dequantize after the
+    gather, so HBM reads stay 1/4 of fp32 (the paper's size win applies to
+    the embedding table too)."""
+    if isinstance(leaf, dict) and ("w_int8" in leaf or "w_int4" in leaf):
+        vals = leaf.get("w_int8", leaf.get("w_int4"))
+        rows = jnp.take(vals, tokens, axis=0).astype(jnp.float32)
+        if "zero" in leaf:
+            rows = rows - leaf["zero"][0]
+        scale = leaf["scale"]
+        if scale.ndim == vals.ndim + 1:
+            # per-group over the vocab axis: row v uses scale[v // g, 0]
+            g = vals.shape[0] // scale.shape[0]
+            row_scale = jnp.take(scale[:, 0], tokens // g, axis=0)
+        else:
+            row_scale = scale[0]
+        return (rows * row_scale).astype(dtype)
+    if isinstance(leaf, dict) and "w" in leaf:
+        leaf = leaf["w"]
+    return jnp.take(leaf, tokens, axis=0).astype(dtype)
+
+
+def embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    tokens = batch["tokens"]
+    dt = cfg.activation_dtype
+    if cfg.n_codebooks > 1:
+        x = _take_embed(params["embed"], tokens[..., 0], dt)
+        for k in range(cfg.n_codebooks - 1):
+            ee = params["extra_embeds"]
+            leaf = (jax.tree.map(lambda a: a[k], ee)
+                    if isinstance(ee, dict) else ee[k])
+            x = x + _take_embed(leaf, tokens[..., k + 1], dt)
+    else:
+        x = _take_embed(params["embed"], tokens, dt)
+    if cfg.frontend != "none" and "frontend_embeds" in batch:
+        fe = linear(params["frontend_proj"], batch["frontend_embeds"].astype(x.dtype))
+        x = jnp.concatenate([fe, x], axis=1)
+    return constrain(x, "batch", None, None)
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    def as_weight(leaf):
+        if isinstance(leaf, dict) and ("w_int8" in leaf or "w_int4" in leaf):
+            from repro.core.quant.quantize import dequantize_tensor
+
+            return dequantize_tensor(leaf, x.dtype)
+        if isinstance(leaf, dict) and "w" in leaf:
+            leaf = leaf["w"]
+        return leaf.astype(x.dtype)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, as_weight(params["embed"]))
+    else:
+        logits = linear(params["unembed"], x)  # quant-aware dispatch
+    if cfg.n_codebooks > 1:
+        extra = jnp.einsum("bsd,kdv->bskv", x, as_weight(params["out_heads"]))
+        logits = jnp.concatenate([logits[:, :, None], extra], axis=2)  # [B,S,K,V]
+    return constrain(logits.astype(jnp.float32), "batch", None, None)
+
+
+# ===================================================================== #
+# Full passes
+# ===================================================================== #
+def _backbone(params, x, cfg: ModelConfig, *, mode: str, caches=None,
+              pos=None, pad_to=0):
+    """Runs all layer stacks. caches/pos only for decode; returns new caches."""
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    remat = cfg.remat and mode == "train"
+    new_caches: Dict[str, Any] = {}
+    aux = ZERO_AUX()
+
+    def get(c, k):
+        return None if c is None else c[k]
+
+    if cfg.arch_type == "hybrid":
+        def group_fn(lp, xc, cache):
+            a = ZERO_AUX()
+            xc, c1, a1 = _apply_rec_block(lp["rec1"], xc, cfg, mode=mode,
+                                          cache=get(cache, "rec1"))
+            xc, c2, a2 = _apply_rec_block(lp["rec2"], xc, cfg, mode=mode,
+                                          cache=get(cache, "rec2"))
+            xc, c3, a3 = _apply_attn_block(lp["attn"], xc, cfg, moe=False, mode=mode,
+                                           cache=get(cache, "attn"),
+                                           positions=positions, pos=pos,
+                                           pad_to=pad_to)
+            return xc, {"rec1": c1, "rec2": c2, "attn": c3}, _acc_aux(_acc_aux(a1, a2), a3)
+
+        x, gc, a = _run_stack(params["groups"], x, cfg, group_fn, mode=mode,
+                              caches=get(caches, "groups"), remat=remat)
+        new_caches["groups"], aux = gc, _acc_aux(aux, a)
+        if "tail" in params:
+            def tail_fn(lp, xc, cache):
+                return _apply_rec_block(lp, xc, cfg, mode=mode, cache=cache)
+            x, tc, a = _run_stack(params["tail"], x, cfg, tail_fn, mode=mode,
+                                  caches=get(caches, "tail"), remat=remat)
+            new_caches["tail"], aux = tc, _acc_aux(aux, a)
+    elif cfg.arch_type == "ssm":
+        def ssm_fn(lp, xc, cache):
+            return _apply_ssm_block(lp, xc, cfg, mode=mode, cache=cache)
+        x, lc, aux = _run_stack(params["layers"], x, cfg, ssm_fn, mode=mode,
+                                caches=get(caches, "layers"), remat=remat)
+        new_caches["layers"] = lc
+    else:
+        if "head_layers" in params:
+            def dense_fn(lp, xc, cache):
+                return _apply_attn_block(lp, xc, cfg, moe=False, mode=mode,
+                                         cache=cache, positions=positions,
+                                         pos=pos, pad_to=pad_to)
+            x, hc, a = _run_stack(params["head_layers"], x, cfg, dense_fn, mode=mode,
+                                  caches=get(caches, "head_layers"), remat=remat)
+            new_caches["head_layers"], aux = hc, _acc_aux(aux, a)
+        moe = cfg.n_experts > 0
+        def main_fn(lp, xc, cache):
+            return _apply_attn_block(lp, xc, cfg, moe=moe, mode=mode,
+                                     cache=cache, positions=positions,
+                                     pos=pos, pad_to=pad_to)
+        x, lc, a = _run_stack(params["layers"], x, cfg, main_fn, mode=mode,
+                              caches=get(caches, "layers"), remat=remat)
+        new_caches["layers"], aux = lc, _acc_aux(aux, a)
+    return x, new_caches, aux
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Teacher-forced pass: (logits, aux). Used by training."""
+    x = embed_inputs(params, batch, cfg)
+    x, _, aux = _backbone(params, x, cfg, mode="train")
+    return lm_head(params, x, cfg), aux
+
+
+def prefill(params, batch, cfg: ModelConfig, pad_to: int = 0):
+    """(last-position logits, cache). ``pad_to`` reserves cache slots for
+    subsequent decode_step calls (default: seq + 64)."""
+    x = embed_inputs(params, batch, cfg)
+    if not pad_to:
+        pad_to = x.shape[1] + 64
+    x, caches, _ = _backbone(params, x, cfg, mode="prefill", pad_to=pad_to)
+    return lm_head(params, x[:, -1:], cfg), caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
+    """tokens [B,1] (or [B,1,K]); pos: scalar int32 position of this token."""
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    x, caches, _ = _backbone(params, x, cfg, mode="decode", caches=caches, pos=pos)
+    return lm_head(params, x, cfg), caches
+
+
+# ===================================================================== #
+# Cache construction (zeros; shapes drive the decode dry-run)
+# ===================================================================== #
+def _cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    w = _attn_window(cfg)
+    return min(seq_len, w) if w else seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    dt = cfg.activation_dtype
+    hd = cfg.resolved_head_dim
+    cl = _cache_len(cfg, seq_len)
+
+    def kv(n):
+        if cfg.kv_cache_int8:
+            return (jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd), jnp.int8),
+                    jnp.zeros((n, batch, cl, cfg.n_kv_heads), jnp.float32),
+                    jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd), jnp.int8),
+                    jnp.zeros((n, batch, cl, cfg.n_kv_heads), jnp.float32))
+        return (jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd), dt),
+                jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd), dt))
+
+    def mla(n):
+        return (jnp.zeros((n, batch, cl, cfg.kv_lora_rank), dt),
+                jnp.zeros((n, batch, cl, cfg.qk_rope_dim), dt))
+
+    def ssm(n):
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        return (jnp.zeros((n, batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+                          jnp.float32),
+                jnp.zeros((n, batch, cfg.conv_width - 1, conv_dim), dt))
+
+    def rec(n):
+        return (jnp.zeros((n, batch, cfg.d_inner), dt),
+                jnp.zeros((n, batch, cfg.conv_width - 1, cfg.d_inner), dt))
+
+    caches: Dict[str, Any] = {}
+    if cfg.arch_type == "hybrid":
+        n_groups, n_tail = hybrid_split(cfg)
+        caches["groups"] = {"rec1": rec(n_groups), "rec2": rec(n_groups),
+                            "attn": kv(n_groups)}
+        if n_tail:
+            caches["tail"] = rec(n_tail)
+    elif cfg.arch_type == "ssm":
+        caches["layers"] = ssm(cfg.n_layers)
+    else:
+        n_main = cfg.n_layers - cfg.n_dense_layers if cfg.n_experts else cfg.n_layers
+        mk = mla if cfg.attention == "mla" else kv
+        if cfg.n_experts and cfg.n_dense_layers:
+            caches["head_layers"] = mk(cfg.n_dense_layers)
+        caches["layers"] = mk(n_main)
+    return caches

@@ -1,0 +1,2 @@
+from repro.serving.engine import InferenceSession, Pipeline, Request, RequestQueue
+from repro.serving.scheduler import ContinuousBatchingEngine, GenRequest

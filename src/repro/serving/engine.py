@@ -1,0 +1,153 @@
+"""Inference runtime: session + micro-batching queue + pipeline stages.
+
+The ONNX-Runtime-in-Docker analog (DESIGN §2): an InferenceSession wraps one
+artifact (params + config, any quant variant) with jit-compiled entry points;
+a RequestQueue batches incoming requests up to ``max_batch`` per pump —
+deterministic (no threads) so serving behaviour is unit-testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class InferenceStats:
+    calls: int = 0
+    total_ms: float = 0.0
+    latencies_ms: Optional[List[float]] = None
+
+    def record(self, ms: float) -> None:
+        self.calls += 1
+        self.total_ms += ms
+        if self.latencies_ms is None:
+            self.latencies_ms = []
+        self.latencies_ms.append(ms)
+
+    @property
+    def mean_ms(self) -> float:
+        return self.total_ms / max(self.calls, 1)
+
+    def percentile_ms(self, p: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        xs = sorted(self.latencies_ms)
+        return xs[min(int(len(xs) * p), len(xs) - 1)]
+
+
+class InferenceSession:
+    """One loaded artifact. Entry points: logits(), generate(), plus the
+    raw prefill/decode pair for the serving loop."""
+
+    def __init__(self, params, cfg: ModelConfig):
+        self.params = params
+        self.cfg = cfg
+        self.stats = InferenceStats()
+        self._forward = jax.jit(lambda p, b: forward(p, b, cfg)[0])
+        self._prefill = jax.jit(lambda p, b: prefill(p, b, cfg))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+
+    def logits(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._forward(self.params, batch))
+        self.stats.record((time.perf_counter() - t0) * 1e3)
+        return out
+
+    def generate(self, batch: Dict[str, jax.Array], n_new: int) -> jax.Array:
+        """Greedy decode n_new tokens after a prefill."""
+        cfg = self.cfg
+        last, cache = self._prefill(self.params, batch)
+        tok_len = batch["tokens"].shape[1] + cfg.n_frontend_tokens
+        outs = []
+        nxt = jnp.argmax(last[..., -1, :], axis=-1).astype(jnp.int32)
+        if cfg.n_codebooks > 1:
+            nxt = nxt.reshape(nxt.shape[0], 1, -1)
+        else:
+            nxt = nxt.reshape(-1, 1)
+        for i in range(n_new):
+            outs.append(nxt)
+            logits, cache = self._decode(self.params, cache, nxt,
+                                         jnp.int32(tok_len + i))
+            nxt = jnp.argmax(logits[..., -1, :], axis=-1).astype(jnp.int32)
+            if cfg.n_codebooks > 1:
+                nxt = nxt.reshape(nxt.shape[0], 1, -1)
+            else:
+                nxt = nxt.reshape(-1, 1)
+        return jnp.concatenate(outs, axis=1)
+
+
+# --------------------------------------------------------------------- #
+# Pipeline stages (thin-edge Python-scripts / Node-RED analog)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Pipeline:
+    """pre -> infer -> post, each a pure callable (paper §4)."""
+    preprocess: Callable[[Any], Dict[str, jax.Array]]
+    infer: Callable[[Dict[str, jax.Array]], jax.Array]
+    postprocess: Callable[[jax.Array, Any], Any]
+
+    def __call__(self, raw: Any) -> Any:
+        batch = self.preprocess(raw)
+        out = self.infer(batch)
+        return self.postprocess(out, raw)
+
+
+# --------------------------------------------------------------------- #
+# Micro-batching request queue
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Request:
+    rid: int
+    payload: Any
+    result: Any = None
+    done: bool = False
+
+
+class RequestQueue:
+    def __init__(self, pipeline: Pipeline, max_batch: int = 8,
+                 stack: Optional[Callable[[List[Any]], Any]] = None,
+                 unstack: Optional[Callable[[Any, int], List[Any]]] = None):
+        self.pipeline = pipeline
+        self.max_batch = max_batch
+        self._queue: deque[Request] = deque()
+        self._next = 0
+        # default: payloads are dicts of arrays -> stack on axis 0
+        self._stack = stack or (lambda ps: jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *ps))
+        self._unstack = unstack
+
+    def submit(self, payload: Any) -> Request:
+        req = Request(self._next, payload)
+        self._next += 1
+        self._queue.append(req)
+        return req
+
+    def pump(self) -> int:
+        """Process one micro-batch; returns number of requests served."""
+        if not self._queue:
+            return 0
+        reqs = [self._queue.popleft()
+                for _ in range(min(self.max_batch, len(self._queue)))]
+        batch = self._stack([r.payload for r in reqs])
+        results = self.pipeline(batch)
+        if self._unstack:
+            per = self._unstack(results, len(reqs))
+        else:  # keep the batch dim: each requester gets its own row(s) back
+            per = [jax.tree.map(lambda x, i=i: x[i:i + 1], results)
+                   for i in range(len(reqs))]
+        for r, res in zip(reqs, per):
+            r.result, r.done = res, True
+        return len(reqs)
+
+    def drain(self) -> None:
+        while self._queue:
+            self.pump()

@@ -1,0 +1,157 @@
+"""Continuous batching decode scheduler (vLLM-style, edge-sized).
+
+A fixed pool of ``n_slots`` decode slots shares one batched KV cache.
+Requests are prefilled one at a time (batch-1 prefill) and their caches
+inserted into a free slot; every ``step()`` decodes ALL active slots in a
+single jit-compiled decode_step with per-slot positions (the vector-pos
+support in repro.models.attention). Finished sequences free their slot
+immediately, so new requests join mid-flight — no batch barrier.
+
+Deterministic and thread-free, like the rest of the serving layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class GenRequest:
+    rid: int
+    tokens: jax.Array                  # [1, S_prompt] (or [1,S,K] audio)
+    max_new_tokens: int
+    frontend_embeds: Optional[jax.Array] = None
+    eos_id: int = -1                   # -1: no EOS stopping
+    out_tokens: Optional[List[int]] = None
+    done: bool = False
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+
+def _tree_insert(batched, single, slot: int):
+    """Write a batch-1 cache pytree into slot ``slot`` of the batched cache.
+
+    Cache leaves are [L, B, ...]; single leaves are [L, 1, ...]."""
+    return jax.tree.map(
+        lambda c, u: jax.lax.dynamic_update_slice_in_dim(c, u.astype(c.dtype),
+                                                         slot, axis=1),
+        batched, single)
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, params, cfg: ModelConfig, n_slots: int = 4,
+                 max_len: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, n_slots, max_len)
+        self.positions = jnp.zeros((n_slots,), jnp.int32)
+        self.active: List[Optional[GenRequest]] = [None] * n_slots
+        self.last_tokens = (jnp.zeros((n_slots, 1, cfg.n_codebooks), jnp.int32)
+                            if cfg.n_codebooks > 1
+                            else jnp.zeros((n_slots, 1), jnp.int32))
+        self.pending: deque[GenRequest] = deque()
+        self._next_rid = 0
+        self.steps = 0
+        # jit entry points (shapes fixed by the slot pool)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg, pad_to=max_len))
+
+    # ---------------------------------------------------------------- #
+    def submit(self, tokens, max_new_tokens: int = 16,
+               frontend_embeds=None, eos_id: int = -1) -> GenRequest:
+        req = GenRequest(self._next_rid, tokens, max_new_tokens,
+                         frontend_embeds, eos_id, out_tokens=[],
+                         submitted_at=time.perf_counter())
+        self._next_rid += 1
+        self.pending.append(req)
+        return req
+
+    def _admit(self) -> None:
+        """Prefill pending requests into free slots."""
+        for slot in range(self.n_slots):
+            if self.active[slot] is not None or not self.pending:
+                continue
+            req = self.pending.popleft()
+            batch = {"tokens": req.tokens}
+            if req.frontend_embeds is not None:
+                batch["frontend_embeds"] = req.frontend_embeds
+            last, single_cache = self._prefill(self.params, batch)
+            self.cache = _tree_insert(self.cache, single_cache, slot)
+            prompt_len = req.tokens.shape[1] + self.cfg.n_frontend_tokens
+            self.positions = self.positions.at[slot].set(prompt_len)
+            nxt = jnp.argmax(last[0, -1], axis=-1).astype(jnp.int32)
+            self._record(req, nxt)
+            self.last_tokens = self.last_tokens.at[slot].set(
+                nxt.reshape(self.last_tokens.shape[1:]))
+            self.active[slot] = req
+
+    def _record(self, req: GenRequest, token) -> None:
+        tok = token.tolist() if hasattr(token, "tolist") else token
+        if not req.out_tokens:
+            req.first_token_at = time.perf_counter()
+        req.out_tokens.append(tok)
+        first = tok[0] if isinstance(tok, list) else tok
+        if len(req.out_tokens) >= req.max_new_tokens or first == req.eos_id:
+            req.done = True
+            req.finished_at = time.perf_counter()
+
+    # ---------------------------------------------------------------- #
+    def step(self) -> int:
+        """Admit -> one batched decode step -> harvest. Returns #active."""
+        self._admit()
+        if not any(self.active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_tokens, self.positions)
+        self.positions = self.positions + 1
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # [B(,K)]
+        self.steps += 1
+        n_active = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self._record(req, nxt[slot])
+            self.last_tokens = self.last_tokens.at[slot].set(
+                nxt[slot].reshape(self.last_tokens.shape[1:]))
+            if req.done:
+                self.active[slot] = None     # slot frees mid-flight
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.pending and not any(self.active):
+                break
+            self.step()
+
+    # ---------------------------------------------------------------- #
+    def metrics(self, reqs: List[GenRequest]) -> Dict[str, float]:
+        done = [r for r in reqs if r.done]
+        if not done:
+            return {"completed": 0}
+        ttft = [r.first_token_at - r.submitted_at for r in done]
+        total = [r.finished_at - r.submitted_at for r in done]
+        toks = sum(len(r.out_tokens) for r in done)
+        wall = max(r.finished_at for r in done) - min(r.submitted_at
+                                                      for r in done)
+        return {
+            "completed": len(done),
+            "decode_steps": self.steps,
+            "mean_ttft_s": sum(ttft) / len(ttft),
+            "mean_latency_s": sum(total) / len(total),
+            "throughput_tok_s": toks / max(wall, 1e-9),
+        }

@@ -1,0 +1,5 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.loop import fit
+from repro.training.loss import IGNORE, total_loss, xent
+from repro.training.optimizer import OptimizerConfig, adamw_init, adamw_update
+from repro.training.train_step import make_train_step, train_step

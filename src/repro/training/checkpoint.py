@@ -1,0 +1,82 @@
+"""Checkpointing / artifact serialization.
+
+Format (also the fleet-registry artifact format, DESIGN §2 mapping of
+"ONNX model artifact"):
+    <dir>/weights.npz        flattened param tree ('/'-joined paths)
+    <dir>/manifest.json      arch config, quant mode, version, metrics, sha256
+
+int8 leaves round-trip exactly (npz stores dtype); the manifest's sha256 is
+content-addressed over weights.npz, which the registry uses for integrity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+    return tree
+
+
+def file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save_checkpoint(directory: str, params, cfg: ModelConfig,
+                    meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    os.makedirs(directory, exist_ok=True)
+    wpath = os.path.join(directory, "weights.npz")
+    np.savez(wpath, **_flatten(params))
+    manifest = {
+        "model_config": dataclasses.asdict(cfg),
+        "sha256": file_sha256(wpath),
+        "size_bytes": os.path.getsize(wpath),
+        "meta": meta or {},
+    }
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, default=str)
+    return manifest
+
+
+def load_checkpoint(directory: str) -> Tuple[Any, ModelConfig, Dict[str, Any]]:
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    wpath = os.path.join(directory, "weights.npz")
+    if file_sha256(wpath) != manifest["sha256"]:
+        raise IOError(f"checkpoint corrupted: sha mismatch in {directory}")
+    mc = manifest["model_config"]
+    mc["layer_pattern"] = tuple(mc.get("layer_pattern") or ())
+    cfg = ModelConfig(**mc)
+    with np.load(wpath) as npz:
+        params = _unflatten({k: npz[k] for k in npz.files})
+    return params, cfg, manifest

@@ -1,0 +1,37 @@
+"""Minimal production train loop: jit once, stream batches, log, checkpoint."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.training.optimizer import OptimizerConfig, adamw_init
+from repro.training.train_step import train_step
+
+
+def fit(cfg: ModelConfig, oc: OptimizerConfig,
+        stream: Iterator[Dict[str, jax.Array]], steps: int,
+        params=None, log_every: int = 20,
+        log_fn: Callable[[str], None] = print):
+    """Returns (params, history). CPU-friendly: no sharding, pure jit."""
+    key = jax.random.PRNGKey(0)
+    if params is None:
+        params = init_params(key, cfg)
+    opt_state = adamw_init(params, oc)
+    step_fn = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, oc))
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = next(stream)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = round(time.perf_counter() - t0, 1)
+            history.append(m)
+            log_fn(f"step {i:5d} loss={m['loss']:.4f} acc={m['token_acc']:.3f} "
+                   f"gnorm={m['grad_norm']:.2f} ({m['wall_s']}s)")
+    return params, history

@@ -1,0 +1,37 @@
+"""Cross-entropy loss with ignore-index masking + MoE aux terms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+IGNORE = -100
+
+
+def xent(logits: jax.Array, labels: jax.Array):
+    """logits [..., V] f32; labels [...] int with IGNORE for masked positions."""
+    valid = labels != IGNORE
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(valid.sum(), 1)
+    loss = jnp.where(valid, nll, 0.0).sum() / n
+    acc = jnp.where(valid, jnp.argmax(logits, -1) == safe, False).sum() / n
+    return loss, acc
+
+
+def total_loss(logits, aux, batch, cfg: ModelConfig):
+    """Pads labels with IGNORE over frontend positions automatically."""
+    labels = batch["labels"]
+    if cfg.frontend != "none" and logits.shape[1] != labels.shape[1]:
+        pad = logits.shape[1] - labels.shape[1]
+        pad_block = jnp.full(labels.shape[:1] + (pad,) + labels.shape[2:], IGNORE,
+                             labels.dtype)
+        labels = jnp.concatenate([pad_block, labels], axis=1)
+    loss, acc = xent(logits, labels)
+    loss = loss + cfg.router_aux_coef * aux["lb_loss"] \
+                + cfg.router_z_coef * aux["z_loss"]
+    metrics = {"xent": loss, "token_acc": acc,
+               "lb_loss": aux["lb_loss"], "dropped": aux["fraction_dropped"]}
+    return loss, metrics

@@ -1,0 +1,95 @@
+"""AdamW built on raw JAX (no optax in the image), plus an int8-state
+variant ("quantize everything that's memory-bound" — the paper's technique
+applied beyond inference; used by the kimi-k2 FSDP recipe in DESIGN §5).
+
+State layout (pytree-of-dicts, same structure as params):
+    fp32:  {"m": f32, "v": f32}
+    int8:  {"m": {"q": i8, "scale": f32[..,1]}, "v": {...}}   (per-row scales)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    int8_state: bool = False
+
+
+def lr_at(step, oc: OptimizerConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(oc.warmup_steps, 1))
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (0.1 + 0.9 * cos)
+
+
+# ---- int8 moment compression ------------------------------------------ #
+def _q8(x: jax.Array) -> Dict[str, jax.Array]:
+    if x.ndim == 0:
+        x = x[None]
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-20) / 127.0
+    return {"q": jnp.round(x / scale).astype(jnp.int8), "scale": scale}
+
+
+def _dq8(q: Dict[str, jax.Array]) -> jax.Array:
+    return q["q"].astype(jnp.float32) * q["scale"]
+
+
+def adamw_init(params, oc: OptimizerConfig):
+    def zeros(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if oc.int8_state:
+            return {"m": _q8(z), "v": _q8(z)}
+        return {"m": z, "v": z}
+
+    return {"mu": jax.tree.map(zeros, params), "step": jnp.int32(0)}
+
+
+def adamw_update(params, grads, state, oc: OptimizerConfig):
+    step = state["step"] + 1
+    lr = lr_at(step, oc)
+    b1c = 1.0 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - oc.b2 ** step.astype(jnp.float32)
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, mu):
+        g = g.astype(jnp.float32) * scale
+        m = _dq8(mu["m"]) if oc.int8_state else mu["m"]
+        v = _dq8(mu["v"]) if oc.int8_state else mu["v"]
+        if oc.int8_state and p.ndim == 0:
+            m, v = m[0], v[0]
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * jnp.square(g)
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + oc.eps)
+        decay = oc.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32) - lr * (update + decay)).astype(p.dtype)
+        new_mu = ({"m": _q8(m), "v": _q8(v)} if oc.int8_state
+                  else {"m": m, "v": v})
+        return new_p, new_mu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    out = [upd(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"mu": new_mu, "step": step}, metrics

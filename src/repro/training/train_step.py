@@ -1,0 +1,64 @@
+"""jit-able train step with gradient-accumulation microbatching.
+
+grad-accum is a lax.scan over microbatches (DESIGN §5: this is what keeps the
+kimi-k2 / dsv2 MoE dispatch buffers inside v5e HBM at global_batch=256).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.training.loss import total_loss
+from repro.training.optimizer import OptimizerConfig, adamw_update
+
+
+def _microbatches(batch: Dict[str, jax.Array], accum: int):
+    return jax.tree.map(
+        lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch)
+
+
+def loss_and_grads(params, batch, cfg: ModelConfig):
+    def loss_fn(p, mb):
+        logits, aux = forward(p, mb, cfg)
+        return total_loss(logits, aux, mb, cfg)
+
+    accum = max(cfg.grad_accum, 1)
+    if accum == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    mbs = _microbatches(batch, accum)
+
+    def body(carry, mb):
+        g_acc, l_acc, m_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, grads)
+        m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+        return (g_acc, l_acc + loss, m_acc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    m0 = {"xent": 0.0, "token_acc": 0.0, "lb_loss": 0.0, "dropped": 0.0}
+    m0 = jax.tree.map(jnp.float32, m0)
+    (grads, loss, metrics), _ = jax.lax.scan(body, (g0, jnp.float32(0), m0), mbs)
+    inv = 1.0 / accum
+    return (loss * inv,
+            jax.tree.map(lambda m: m * inv, metrics),
+            jax.tree.map(lambda g: g * inv, grads))
+
+
+def train_step(params, opt_state, batch, cfg: ModelConfig, oc: OptimizerConfig):
+    loss, metrics, grads = loss_and_grads(params, batch, cfg)
+    params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, oc)
+    metrics = dict(metrics, loss=loss, **opt_metrics)
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, oc: OptimizerConfig):
+    return functools.partial(train_step, cfg=cfg, oc=oc)

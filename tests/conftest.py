@@ -1,0 +1,29 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and benches
+# must see 1 device (the dry-run sets its own flags in a separate process).
+
+import sys
+sys.path.insert(0, "src")
+
+
+def make_batch(cfg, b=2, s=32, seed=0, train=False):
+    key = jax.random.PRNGKey(seed)
+    s_text = s - cfg.n_frontend_tokens
+    shape = (b, s_text, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s_text)
+    batch = {"tokens": jax.random.randint(key, shape, 0, cfg.vocab_size)}
+    if train:
+        batch["labels"] = jax.random.randint(
+            jax.random.fold_in(key, 1), shape, 0, cfg.vocab_size)
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

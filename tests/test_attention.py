@@ -1,0 +1,88 @@
+"""Attention invariants: chunked-q attention == naive softmax; sliding-window
+masking; decode-continues-prefill for GQA, MLA and ring-buffer caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models.attention import (chunked_attention, gqa_decode, gqa_prefill,
+                                    init_gqa_params, init_mla_params,
+                                    mla_decode, mla_prefill)
+
+import repro.models.attention as attn_mod
+
+
+def naive_attention(q, k, v, window=0):
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, s, hkv, hq // hkv, hd)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qg, k) / jnp.sqrt(hd)
+    rel = jnp.arange(s)[:, None] - jnp.arange(s)[None, :]
+    mask = rel >= 0
+    if window:
+        mask &= rel < window
+    scores = jnp.where(mask[None, None, None], scores, -2e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", probs, v)
+    return out.reshape(b, s, hq, hd)
+
+
+@pytest.mark.parametrize("window", [0, 8, 16])
+@pytest.mark.parametrize("s", [16, 48, 64])
+def test_chunked_attention_matches_naive(window, s, monkeypatch):
+    monkeypatch.setattr(attn_mod, "Q_CHUNK", 16)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, s, 4, 8), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, 2, 8), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, 2, 8), jnp.float32)
+    out = chunked_attention(q, k, v, jnp.arange(s), window=window)
+    ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def _decode_continues_prefill(cfg, init_fn, prefill_fn, decode_fn, window=0):
+    p = init_fn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 13, cfg.d_model),
+                          jnp.float32)
+    full, _ = prefill_fn(p, x, jnp.arange(13), cfg, window=window)
+    pre, cache = prefill_fn(p, x[:, :12], jnp.arange(12), cfg, window=window,
+                            pad_to=16)
+    dec, _ = decode_fn(p, x[:, 12:13], cache, 12, cfg, window=window)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, 12]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_decode_continues_prefill():
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    _decode_continues_prefill(cfg, init_gqa_params, gqa_prefill, gqa_decode)
+
+
+def test_gqa_ring_buffer_decode_continues_prefill():
+    cfg = C.smoke_config("recurrentgemma-9b").with_overrides(dtype="float32")
+    _decode_continues_prefill(cfg, init_gqa_params, gqa_prefill, gqa_decode,
+                              window=8)
+
+
+def test_mla_decode_continues_prefill():
+    cfg = C.smoke_config("deepseek-v2-236b").with_overrides(dtype="float32")
+    _decode_continues_prefill(cfg, init_mla_params, mla_prefill, mla_decode)
+
+
+def test_ring_buffer_respects_window():
+    """Tokens older than the window must not influence decode output."""
+    cfg = C.smoke_config("recurrentgemma-9b").with_overrides(dtype="float32")
+    p = init_gqa_params(jax.random.PRNGKey(0), cfg)
+    w = 8
+    x1 = jax.random.normal(jax.random.PRNGKey(1), (1, 24, cfg.d_model))
+    x2 = x1.at[:, :8].set(jax.random.normal(jax.random.PRNGKey(2),
+                                            (1, 8, cfg.d_model)))
+    # same last-16 tokens, different (expired) first-8 tokens
+    _, c1 = gqa_prefill(p, x1, jnp.arange(24), cfg, window=w)
+    _, c2 = gqa_prefill(p, x2, jnp.arange(24), cfg, window=w)
+    xt = jax.random.normal(jax.random.PRNGKey(3), (1, 1, cfg.d_model))
+    d1, _ = gqa_decode(p, xt, c1, 24, cfg, window=w)
+    d2, _ = gqa_decode(p, xt, c2, 24, cfg, window=w)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,75 @@
+"""Guard the assignment table: every full config must match it exactly."""
+import pytest
+
+from repro import configs as C
+
+TABLE = {
+    # arch: (type, L, d_model, H, kv, d_ff, vocab)
+    "phi-3-vision-4.2b": ("vlm", 32, 3072, 32, 32, 8192, 32064),
+    "deepseek-7b": ("dense", 30, 4096, 32, 32, 11008, 102400),
+    "recurrentgemma-9b": ("hybrid", 38, 4096, 16, 1, 12288, 256000),
+    "deepseek-v2-236b": ("moe", 60, 5120, 128, 128, 1536, 102400),
+    "kimi-k2-1t-a32b": ("moe", 61, 7168, 64, 8, 2048, 163840),
+    "musicgen-large": ("audio", 48, 2048, 32, 32, 8192, 2048),
+    "mamba2-780m": ("ssm", 48, 1536, 0, 0, 0, 50280),
+    "mistral-nemo-12b": ("dense", 40, 5120, 32, 8, 14336, 131072),
+    "phi3-mini-3.8b": ("dense", 32, 3072, 32, 32, 8192, 32064),
+    "stablelm-1.6b": ("dense", 24, 2048, 32, 32, 5632, 100352),
+}
+
+
+@pytest.mark.parametrize("arch", list(TABLE))
+def test_full_config_matches_assignment(arch):
+    t, L, d, h, kv, ff, v = TABLE[arch]
+    cfg = C.get_config(arch)
+    assert cfg.arch_type == t
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.vocab_size == v
+    if t != "ssm":
+        assert cfg.n_heads == h
+        assert cfg.n_kv_heads == kv
+        assert cfg.d_ff == ff
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", list(TABLE))
+def test_smoke_config_is_reduced(arch):
+    cfg = C.smoke_config(arch)
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+def test_moe_details():
+    dsv2 = C.get_config("deepseek-v2-236b")
+    assert (dsv2.n_experts, dsv2.top_k, dsv2.n_shared_experts) == (160, 6, 2)
+    assert dsv2.kv_lora_rank == 512 and dsv2.attention == "mla"
+    kimi = C.get_config("kimi-k2-1t-a32b")
+    assert (kimi.n_experts, kimi.top_k) == (384, 8)
+    # kimi must be ~1T total / ~32B active
+    assert 0.9e12 < kimi.param_count() < 1.2e12, kimi.param_count()
+    assert 25e9 < kimi.param_count(active_only=True) < 40e9
+
+
+def test_ssm_details():
+    m = C.get_config("mamba2-780m")
+    assert m.ssm_state == 128 and m.attention == "full" and m.n_heads == 0
+    assert 0.6e9 < m.param_count() < 1.0e9
+
+
+def test_hybrid_pattern():
+    rg = C.get_config("recurrentgemma-9b")
+    types = rg.layer_types()
+    assert types[:3] == ("rec", "rec", "attn") and len(types) == 38
+    assert rg.window == 2048
+
+
+def test_long_context_override():
+    dense = C.get_config("mistral-nemo-12b")
+    lc = dense.for_long_context()
+    assert lc.window == 4096          # sub-quadratic variant engaged
+    ssm = C.get_config("mamba2-780m")
+    assert ssm.for_long_context() == ssm   # already sub-quadratic
+    rg = C.get_config("recurrentgemma-9b")
+    assert rg.for_long_context().window == 2048  # keeps its native window

@@ -1,0 +1,116 @@
+"""Fleet MLOps lifecycle tests: registry integrity, device admission,
+install/activate/rollback, canary health gate (the paper's §4 semantics)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro import configs as C
+from repro.core.quant import QuantConfig, quantize_tree
+from repro.fleet import (ArtifactRegistry, DeviceProfile, EdgeAgent,
+                         FleetOrchestrator, HealthGate, InstallError)
+from repro.models import init_params
+
+
+@pytest.fixture
+def setup(tmp_path):
+    cfg = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    registry = ArtifactRegistry(str(tmp_path / "registry"))
+    return cfg, params, registry
+
+
+def test_publish_fetch_roundtrip(setup):
+    cfg, params, registry = setup
+    ref = registry.publish("m", "v1", params, cfg, "fp32",
+                           metrics={"accuracy": 0.9})
+    params2, cfg2, manifest = registry.fetch(ref)
+    assert cfg2.d_model == cfg.d_model
+    assert manifest["meta"]["metrics"]["accuracy"] == 0.9
+    a = jax.tree.leaves(params)[0]
+    b = jax.tree.leaves(params2)[0]
+    assert bool(jnp.all(a == b))
+
+
+def test_registry_detects_tampering(setup):
+    cfg, params, registry = setup
+    ref = registry.publish("m", "v1", params, cfg)
+    wpath = os.path.join(registry._index[ref.key]["dir"], "weights.npz")
+    with open(wpath, "r+b") as f:
+        f.seek(100)
+        f.write(b"XX")
+    with pytest.raises(IOError, match="sha"):
+        registry.fetch(ref)
+
+
+def test_quantized_artifact_roundtrip(setup):
+    cfg, params, registry = setup
+    qp, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
+    ref = registry.publish("m", "v1", qp, cfg, "dynamic_int8")
+    assert ref.size_bytes < registry.publish("m", "v1", params, cfg,
+                                             "fp32").size_bytes / 2
+    qp2, _, _ = registry.fetch(ref)
+    leaves = {k: v for k, v in
+              jax.tree_util.tree_flatten_with_path(qp2)[0]}
+    assert any(str(p[-1].key) == "w_int8" and v.dtype == jnp.int8
+               for p, v in jax.tree_util.tree_flatten_with_path(qp2)[0])
+
+
+def test_device_profile_admission(setup):
+    cfg, params, registry = setup
+    fp = registry.publish("m", "v1", params, cfg, "fp32")
+    tiny = DeviceProfile("tiny", memory_bytes=1000,
+                         allowed_variants=("static_int8",))
+    agent = EdgeAgent("dev-0", registry, tiny)
+    with pytest.raises(InstallError, match="variant"):
+        agent.install(fp)
+
+
+def test_install_activate_rollback(setup):
+    cfg, params, registry = setup
+    v1 = registry.publish("m", "v1", params, cfg, "fp32")
+    bumped = jax.tree.map(lambda x: x * 1.01 if jnp.issubdtype(
+        x.dtype, jnp.floating) else x, params)
+    v2 = registry.publish("m", "v2", bumped, cfg, "fp32")
+    agent = EdgeAgent("dev-0", registry, DeviceProfile(memory_bytes=10**10))
+    agent.activate(v1)
+    batch = make_batch(cfg)
+    out1 = agent.infer(batch)
+    agent.activate(v2)
+    assert agent.active.version == "v2"
+    prev = agent.rollback()
+    assert prev.version == "v1" and agent.active.version == "v1"
+    out2 = agent.infer(batch)
+    assert bool(jnp.all(out1 == out2)), "rollback must restore v1 behaviour"
+    kinds = [e["kind"] for e in agent.events]
+    assert "rollback" in kinds
+
+
+def test_health_gate():
+    gate = HealthGate(max_accuracy_drop=0.02, max_latency_ratio=1.5)
+    base = {"accuracy": 0.95, "mean_latency_ms": 100.0}
+    assert gate.ok(base, {"accuracy": 0.94, "mean_latency_ms": 120.0})
+    assert not gate.ok(base, {"accuracy": 0.80, "mean_latency_ms": 100.0})
+    assert not gate.ok(base, {"accuracy": 0.95, "mean_latency_ms": 500.0})
+
+
+def test_orchestrator_variant_policy(setup):
+    cfg, params, registry = setup
+    registry.publish("m", "v1", params, cfg, "fp32")
+    qp, _ = quantize_tree(params, QuantConfig("static_int8", min_size=1024))
+    registry.publish("m", "v1", qp, cfg, "static_int8")
+    orch = FleetOrchestrator(registry)
+    orch.register_device(EdgeAgent("big", registry,
+                                   DeviceProfile("std", 8 * 1024**3)))
+    orch.register_device(EdgeAgent(
+        "small", registry,
+        DeviceProfile("pi4", 4 * 1024**3,
+                      allowed_variants=("static_int8", "dynamic_int8"))))
+    report = orch.rollout("m", "v1", validate=lambda a: {"accuracy": 1.0,
+                                                         "mean_latency_ms": 1.0})
+    assert report.succeeded
+    st = orch.status()
+    assert st["big"]["active"].endswith(":fp32")
+    assert st["small"]["active"].endswith(":static_int8")

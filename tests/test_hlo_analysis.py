@@ -1,0 +1,66 @@
+"""HLO analyzer invariants: while-loop trip multiplication (the reason this
+module exists — compiled.cost_analysis() counts scan bodies once)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import HloModule, analyze_hlo
+
+X = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+W = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+WS = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+MATMUL_FLOPS = 2 * 128 * 128 * 128
+
+
+def test_single_matmul_flops_exact():
+    c = jax.jit(lambda x, w: x @ w).lower(X, W).compile()
+    assert analyze_hlo(c.as_text())["flops"] == MATMUL_FLOPS
+
+
+def test_scan_multiplies_by_trip_count():
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    c = jax.jit(scanned).lower(X, WS).compile()
+    a = analyze_hlo(c.as_text())
+    assert a["flops"] == 10 * MATMUL_FLOPS
+    # and the raw XLA number demonstrates the undercount we correct
+    assert c.cost_analysis()["flops"] < 2 * MATMUL_FLOPS
+
+
+def test_nested_scan():
+    def nested(x, ws):
+        def outer(c, _):
+            def inner(c2, w):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, ws)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    c = jax.jit(nested).lower(X, WS).compile()
+    assert analyze_hlo(c.as_text())["flops"] == 50 * MATMUL_FLOPS
+
+
+def test_scan_bytes_scale_with_trip_count():
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    c = jax.jit(scanned).lower(X, WS).compile()
+    a = analyze_hlo(c.as_text())
+    # at least: 10 x (read c + read w slice + write c)
+    assert a["bytes"] >= 10 * 3 * 128 * 128 * 4
+    # and not the L^2 blow-up (reading all of ws each iteration)
+    assert a["bytes"] <= 40 * 3 * 128 * 128 * 4
+
+
+def test_entry_detected():
+    c = jax.jit(lambda x: x * 2).lower(X).compile()
+    mod = HloModule(c.as_text())
+    assert mod.entry is not None

@@ -1,0 +1,62 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family variant,
+one forward + one train step on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro import configs as C
+from repro.models import decode_step, forward, init_params, prefill
+from repro.training import OptimizerConfig, adamw_init, train_step
+from repro.training.loss import IGNORE
+
+ARCHS = C.all_arch_ids()
+SEQ = 32
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg = C.smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, b=2, s=SEQ)
+    logits, aux = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+    expect = ((2, SEQ, cfg.n_codebooks, cfg.vocab_size)
+              if cfg.n_codebooks > 1 else (2, SEQ, cfg.vocab_size))
+    assert logits.shape == expect
+    assert not bool(jnp.isnan(logits).any())
+    assert jnp.isfinite(aux["lb_loss"])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = C.smoke_config(arch).with_overrides(grad_accum=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    oc = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = adamw_init(params, oc)
+    batch = make_batch(cfg, b=4, s=SEQ, train=True)
+    p2, opt2, metrics = jax.jit(
+        lambda p, o, b: train_step(p, o, b, cfg, oc))(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+    assert int(opt2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = C.smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, b=2, s=SEQ)
+    last, cache = jax.jit(lambda p, b: prefill(p, b, cfg))(params, batch)
+    assert not bool(jnp.isnan(last).any())
+    tok = (jnp.zeros((2, 1, cfg.n_codebooks), jnp.int32)
+           if cfg.n_codebooks > 1 else jnp.zeros((2, 1), jnp.int32))
+    logits, cache2 = jax.jit(
+        lambda p, c, t: decode_step(p, c, t, jnp.int32(SEQ), cfg)
+    )(params, cache, tok)
+    assert not bool(jnp.isnan(logits).any())
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)

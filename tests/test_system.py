@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests: the VQI MLOps loop at miniature scale."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import vqi_batch
+from repro.fleet import ArtifactRegistry
+from repro.fleet.vqi import (TASK, evaluate, make_fleet, publish_variants,
+                             train_vqi_model, vqi_config)
+
+
+def test_vqi_mlops_loop():
+    cfg = vqi_config(d_model=64)
+    params, history = train_vqi_model(cfg, steps=60, batch=16,
+                                      log_fn=lambda s: None)
+    metrics = evaluate(params, cfg, n_batches=2, batch=32)
+    assert metrics["asset_acc"] > 0.7, f"VQI did not learn: {metrics}"
+
+    with tempfile.TemporaryDirectory() as root:
+        registry = ArtifactRegistry(root)
+        refs = publish_variants(registry, "vqi", "v1", params, cfg,
+                                calib_batches=2)
+        assert set(refs) == {"fp32", "dynamic_int8", "static_int8"}
+        # paper claim: int8 artifact much smaller than fp32
+        assert refs["fp32"].size_bytes > 2.0 * refs["static_int8"].size_bytes
+        # quantized variants keep accuracy (small degradation)
+        for variant in ("dynamic_int8", "static_int8"):
+            m = registry._index[refs[variant].key]["metrics"]
+            assert m["cond_acc"] >= metrics["cond_acc"] - 0.1, (variant, m)
+
+        orch = make_fleet(registry, n_standard=1, n_constrained=1)
+        report = orch.rollout(
+            "vqi", "v1",
+            validate=lambda a: evaluate(a.session.params, cfg, 1, 16)
+            if a.session else {})
+        assert report.succeeded
+        st = orch.status()
+        assert any("int8" in h["active"] for h in st.values())
+
+        # bad release is caught and rolled back
+        bad = jax.tree.map(
+            lambda x: x + jax.random.normal(jax.random.PRNGKey(3), x.shape,
+                                            x.dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+        publish_variants(registry, "vqi", "v2", bad, cfg, calib_batches=1)
+        report2 = orch.rollout(
+            "vqi", "v2",
+            validate=lambda a: evaluate(a.session.params, cfg, 1, 16))
+        assert not report2.succeeded
+        assert all(":v1:" in h["active"] for h in orch.status().values())
+
+
+def test_closed_retraining_loop():
+    """Paper Fig. 4 feedback arrow: low-confidence telemetry -> retrain ->
+    improved model republished."""
+    import jax
+    from repro.data import VQITask, vqi_batch
+    from repro.fleet.telemetry import TelemetryHub
+    from repro.fleet.vqi import (TASK, evaluate, retrain_from_telemetry,
+                                 train_vqi_model, vqi_config)
+
+    cfg = vqi_config(d_model=64)
+    # deliberately under-train so telemetry collects low-confidence samples
+    params, _ = train_vqi_model(cfg, steps=15, batch=16, log_fn=lambda s: None)
+    before = evaluate(params, cfg, n_batches=2, batch=32)
+
+    hub = TelemetryHub(retrain_confidence_threshold=0.95)
+    key = jax.random.PRNGKey(5)
+    from repro.fleet.telemetry import InferenceRecord
+    for i in range(3):
+        key, sub = jax.random.split(key)
+        b = vqi_batch(sub, cfg, TASK, 8)
+        for j in range(8):
+            hub.push(InferenceRecord(
+                device_id="dev", model_key="vqi:v1:fp32", latency_ms=1.0,
+                confidence=0.1,     # below threshold -> buffered
+                sample={"frontend_embeds": b["frontend_embeds"][j],
+                        "tokens": b["tokens"][j], "labels": b["labels"][j]}))
+    assert hub.retraining_ready(10)
+
+    new_params, info = retrain_from_telemetry(hub, params, cfg, steps=40,
+                                              batch=16,
+                                              log_fn=lambda s: None)
+    after = evaluate(new_params, cfg, n_batches=2, batch=32)
+    assert info["replayed_samples"] == 24
+    assert after["cond_acc"] >= before["cond_acc"]
+    assert after["asset_acc"] > 0.8, (before, after)
