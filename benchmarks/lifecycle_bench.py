@@ -10,7 +10,7 @@ from typing import List
 import jax
 
 from repro import configs as C
-from repro.core.quant import QuantConfig, quantize_tree
+from repro.api import VariantSpec
 from repro.fleet import ArtifactRegistry, DeviceProfile, EdgeAgent
 from repro.models import init_params
 
@@ -18,7 +18,7 @@ from repro.models import init_params
 def run() -> List[str]:
     cfg = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    qp, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
+    qp, _ = VariantSpec.dynamic_int8().build(params, cfg)
     lines = []
     with tempfile.TemporaryDirectory() as root:
         reg = ArtifactRegistry(root)

@@ -5,22 +5,31 @@ Three tables, one per paper figure/claim:
   fig6b: latency distribution (p10/p50/p90) per variant
   text:  model-size reduction (~4x) and accuracy delta ("small degradation")
 
+Variants are built declaratively through the ``repro.api`` surface
+(``VariantSpec`` + ``ModelArtifact``) and each one is served by an
+``InferenceSession`` pinned to the XLA-fast 'ref' kernel backend via the
+Backend registry (no env-var toggles in the hot path).
+
 Run via ``python -m benchmarks.run``.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs as C
-from repro.core.quant import (CalibrationSession, QuantConfig, quantize_tree,
-                              tree_size_bytes)
-from repro.models import forward, init_params
+from repro.api import ModelArtifact, QuantRecipe, VariantSpec
+from repro.models import init_params
 
 BENCH_ARCH = "stablelm-1.6b"
+BACKEND = "ref"            # per-session kernel backend (TPU: "pallas-tpu")
+
+SPECS = [VariantSpec.fp32(),
+         VariantSpec("int8_dynamic", QuantRecipe(mode="dynamic_int8")),
+         VariantSpec("int8_static", QuantRecipe(mode="static_int8"),
+                     calib_batches=3)]
 
 
 def _cfg():
@@ -34,17 +43,13 @@ def _batch(cfg, seed=0, b=4, s=128):
                                          0, cfg.vocab_size)}
 
 
-def build_variants(cfg, params):
-    out = {"fp32": params}
-    qp_dyn, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
-    out["int8_dynamic"] = qp_dyn
-    qc = QuantConfig("static_int8", min_size=1024)
-    sess = CalibrationSession(params, qc)
-    for i in range(3):
-        jax.block_until_ready(
-            forward(sess.instrumented_params, _batch(cfg, 100 + i), cfg)[0])
-    qp_st, _ = quantize_tree(params, qc, sess.act_scales())
-    out["int8_static"] = qp_st
+def build_variants(cfg, params) -> Dict[str, ModelArtifact]:
+    model = ModelArtifact.create(BENCH_ARCH, "bench", params, cfg)
+    calib = [_batch(cfg, 100 + i) for i in range(3)]
+    out = {}
+    for spec in SPECS:
+        vparams, _ = spec.build(params, cfg, calib_data=calib)
+        out[spec.variant] = model.with_variant(spec.variant, vparams)
     return out
 
 
@@ -57,16 +62,13 @@ def run(iters: int = 10) -> List[str]:
     lat: Dict[str, List[float]] = {}
     logits: Dict[str, jax.Array] = {}
     probe = _batch(cfg, 7)
-    for name, p in variants.items():
-        fwd = jax.jit(lambda pp, bb: forward(pp, bb, cfg)[0])
-        logits[name] = jax.block_until_ready(fwd(p, probe))     # warm + probe
-        ts = []
+    for name, artifact in variants.items():
+        session = artifact.session(backend=BACKEND)
+        logits[name] = session.logits(probe)                # warm + probe
+        session.stats.reset()                               # drop warmup
         for i in range(iters):
-            b = _batch(cfg, i)
-            t0 = time.perf_counter()
-            jax.block_until_ready(fwd(p, b))
-            ts.append((time.perf_counter() - t0) * 1e6)
-        lat[name] = sorted(ts)
+            session.logits(_batch(cfg, i))
+        lat[name] = sorted(ms * 1e3 for ms in session.stats.latencies_ms)
 
     # fig6a: average inference time
     for name, ts in lat.items():
@@ -79,9 +81,9 @@ def run(iters: int = 10) -> List[str]:
             f"quant_fig6b_{name},{ts[len(ts)//2]:.0f},"
             f"p10={ts[len(ts)//10]:.0f}us p90={ts[9*len(ts)//10]:.0f}us")
     # size table
-    base = tree_size_bytes(variants["fp32"])
-    for name, p in variants.items():
-        sz = tree_size_bytes(p)
+    base = variants["fp32"].size_bytes
+    for name, artifact in variants.items():
+        sz = artifact.size_bytes
         lines.append(f"quant_size_{name},{sz},reduction={base/sz:.2f}x")
     # accuracy proxy: top-1 agreement + logit cosine vs fp32
     ref = logits["fp32"]

@@ -6,7 +6,7 @@ from typing import List
 import jax
 
 from repro import configs as C
-from repro.core.quant import QuantConfig, quantize_tree
+from repro.api import VariantSpec
 from repro.models import init_params
 from repro.serving.scheduler import ContinuousBatchingEngine
 
@@ -14,7 +14,7 @@ from repro.serving.scheduler import ContinuousBatchingEngine
 def run() -> List[str]:
     cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    params, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
+    params, _ = VariantSpec.dynamic_int8().build(params, cfg)
     engine = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=96)
     key = jax.random.PRNGKey(7)
     reqs = []

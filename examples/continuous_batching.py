@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
-from repro.core.quant import QuantConfig, quantize_tree
+from repro.api import VariantSpec
 from repro.models import init_params
 from repro.serving.scheduler import ContinuousBatchingEngine
 
@@ -16,8 +16,9 @@ from repro.serving.scheduler import ContinuousBatchingEngine
 def main():
     cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    params, n = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
-    print(f"serving dynamic-int8 artifact ({len(n)} quantized tensors)")
+    params, info = VariantSpec.dynamic_int8().build(params, cfg)
+    print(f"serving dynamic-int8 artifact "
+          f"({len(info['quantized_paths'])} quantized tensors)")
 
     engine = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=96)
     key = jax.random.PRNGKey(7)

@@ -13,23 +13,17 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
-from repro.core.quant import (CalibrationSession, QuantConfig, quantize_tree,
-                              tree_size_bytes)
-from repro.models import forward, init_params
+from repro.api import DEFAULT_VARIANTS
+from repro.core.quant import tree_size_bytes
+from repro.models import init_params
 from repro.serving import InferenceSession
 
 
 def build_variants(cfg, params, calib_batches):
-    variants = {"fp32": params}
-    qp_dyn, _ = quantize_tree(params, QuantConfig("dynamic_int8", min_size=1024))
-    variants["dynamic_int8"] = qp_dyn
-    qc = QuantConfig("static_int8", min_size=1024)
-    sess = CalibrationSession(params, qc)
-    for b in calib_batches:
-        jax.block_until_ready(forward(sess.instrumented_params, b, cfg)[0])
-    qp_st, _ = quantize_tree(params, qc, sess.act_scales())
-    variants["static_int8"] = qp_st
-    return variants
+    """Declarative: each VariantSpec builds its params (static specs run
+    their own calibration passes over ``calib_batches``)."""
+    return {spec.variant: spec.build(params, cfg, calib_data=calib_batches)[0]
+            for spec in DEFAULT_VARIANTS}
 
 
 def main():
@@ -54,11 +48,9 @@ def main():
     print(f"{'variant':14s} {'size MB':>8s} {'mean ms':>9s} {'p10':>7s} {'p90':>7s}")
     results = {}
     for name, p in variants.items():
-        session = InferenceSession(p, cfg)
+        session = InferenceSession(p, cfg, backend="ref")
         session.logits(mk_batch(0))                     # warmup/compile
-        session.stats.latencies_ms = []
-        session.stats.calls = 0
-        session.stats.total_ms = 0.0
+        session.stats.reset()
         for i in range(args.iters):
             session.logits(mk_batch(i))
         lat = sorted(session.stats.latencies_ms)

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
-from repro.core.quant import QuantConfig, quantize_tree, tree_size_bytes
+from repro.api import VariantSpec
+from repro.core.quant import tree_size_bytes
 from repro.data import lm_stream
 from repro.models import forward
 from repro.serving import InferenceSession
@@ -28,10 +29,10 @@ def main():
     assert history[-1]["loss"] < history[0]["loss"], "training must reduce loss"
 
     print("== quantizing (paper §5: dynamic signed-int8) ==")
-    qparams, paths = quantize_tree(params, QuantConfig(mode="dynamic_int8",
-                                                       min_size=1024))
+    qparams, info = VariantSpec.dynamic_int8().build(params, cfg)
     ratio = tree_size_bytes(params) / tree_size_bytes(qparams)
-    print(f"quantized {len(paths)} tensors; size ratio fp32/int8 = {ratio:.2f}x")
+    print(f"quantized {len(info['quantized_paths'])} tensors; "
+          f"size ratio fp32/int8 = {ratio:.2f}x")
 
     batch = next(lm_stream(cfg, batch=4, seq=64, seed=9))
     lf, _ = forward(params, batch, cfg)

@@ -1,10 +1,12 @@
-"""End-to-end EdgeMLOps VQI demo — the paper's Figures 1/4/5 as one script.
+"""End-to-end EdgeMLOps VQI demo — the paper's Figures 1/4/5 as one script,
+driven entirely through the ``repro.api`` control plane.
 
 1.  Train the VQI model (vision-stub frontend + LM backbone) on the synthetic
     TTPLA-like task.
-2.  Publish v1 artifacts: fp32 + static-int8 (calibrated) + dynamic-int8.
+2.  Publish v1 as a ``ModelArtifact`` with declarative ``VariantSpec``s:
+    fp32 + static-int8 (calibrated) + dynamic-int8.
 3.  Deploy to a heterogeneous fleet (standard + Pi-4-class devices; the
-    constrained devices only admit int8 variants).
+    constrained devices only admit int8 variants) via a ``Deployment``.
 4.  Field engineers run inspections; asset-condition updates flow into the
     asset-management table via telemetry.
 5.  Publish a *bad* v2 (simulated training regression); the canary health
@@ -17,11 +19,35 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
-from repro.data import ASSET_TYPES, VQITask, vqi_batch
-from repro.fleet import ArtifactRegistry
-from repro.fleet.vqi import (TASK, evaluate, inspection_pipeline, make_fleet,
-                             publish_variants, train_vqi_model, vqi_config)
+from repro.api import (ArtifactRegistry, Deployment, DeviceProfile,
+                       ModelArtifact, VariantSpec)
+from repro.data import vqi_batch
+from repro.fleet.vqi import (TASK, evaluate, inspection_pipeline,
+                             train_vqi_model, vqi_calib_batches, vqi_config)
 from repro.serving import RequestQueue
+
+SPECS = [VariantSpec.fp32(), VariantSpec.dynamic_int8(),
+         VariantSpec.static_int8(calib_batches=4)]
+
+
+def make_deployment(registry: ArtifactRegistry, n_standard: int = 2,
+                    n_constrained: int = 2) -> Deployment:
+    """Heterogeneous fleet: standard devices (fp32-capable) + Pi-4-class
+    constrained devices that only admit int8 variants. Per-device kernel
+    backend selection goes through the Backend registry: every device here
+    pins the XLA-fast 'ref' backend (a TPU fleet would pin 'pallas-tpu')."""
+    dep = Deployment(registry, model="vqi")
+    for i in range(n_standard):
+        dep.add_device(f"edge-std-{i}",
+                       DeviceProfile("edge-standard", 8 * 1024**3),
+                       backend="ref")
+    for i in range(n_constrained):
+        dep.add_device(
+            f"edge-pi4-{i}",
+            DeviceProfile("edge-pi4-4gb", 4 * 1024**3,
+                          allowed_variants=("static_int8", "dynamic_int8")),
+            backend="ref")
+    return dep
 
 
 def main():
@@ -35,36 +61,38 @@ def main():
 
     with tempfile.TemporaryDirectory() as root:
         registry = ArtifactRegistry(root)
+        dep = make_deployment(registry)
         print("== 2. publishing v1 artifacts (fp32 / static / dynamic int8) ==")
-        refs = publish_variants(registry, "vqi", "v1", params, cfg)
-        for variant, ref in refs.items():
-            m = registry._index[ref.key]["metrics"]
-            print(f"  {variant:13s} {ref.size_bytes/1e6:6.2f} MB "
-                  f"cond_acc={m['cond_acc']:.3f} "
-                  f"lat={m['mean_latency_ms']:.1f} ms")
-        fp32_b = refs["fp32"].size_bytes
-        int8_b = refs["static_int8"].size_bytes
+        v1 = ModelArtifact.create("vqi", "v1", params, cfg)
+        published = dep.publish(v1, SPECS,
+                                calib_data=vqi_calib_batches(cfg, 4),
+                                evaluate=lambda p, c: evaluate(p, c, 2))
+        for variant, art in published.items():
+            print(f"  {variant:13s} {art.size_bytes/1e6:6.2f} MB "
+                  f"cond_acc={art.metrics['cond_acc']:.3f} "
+                  f"lat={art.metrics['mean_latency_ms']:.1f} ms")
+        fp32_b = published["fp32"].size_bytes
+        int8_b = published["static_int8"].size_bytes
         print(f"  size reduction fp32 -> int8: {fp32_b / int8_b:.2f}x")
 
         print("== 3. canary rollout to heterogeneous fleet ==")
-        orch = make_fleet(registry)
-        report = orch.rollout("vqi", "v1",
-                              validate=lambda a: evaluate(a.session.params, cfg, 1)
-                              if a.session else {})
+        report = dep.rollout("v1",
+                             validate=lambda a: evaluate(a.session.params, cfg, 1)
+                             if a.session else {})
         print(f"  rollout v1: success={report.succeeded} "
               f"deployed={report.deployed}")
-        for did, h in orch.status().items():
+        for did, h in dep.status().items():
             print(f"  {did}: active={h['active']}")
         # constrained devices must have received an int8 variant
-        for did, h in orch.status().items():
+        for did, h in dep.status().items():
             if "pi4" in did:
                 assert "int8" in h["active"], f"{did} got a non-int8 artifact!"
 
         print("== 4. field inspections -> asset condition updates ==")
-        hub = orch.telemetry
+        hub = dep.telemetry
         key = jax.random.PRNGKey(42)
         for round_i in range(2):
-            for did, agent in orch.devices.items():
+            for did, agent in dep.devices.items():
                 key, sub = jax.random.split(key)
                 raw = dict(vqi_batch(sub, cfg, TASK, 4))
                 raw["asset_ids"] = [f"asset-{round_i}-{did}-{j}" for j in range(4)]
@@ -92,14 +120,16 @@ def main():
             lambda x: x + 0.8 * jax.random.normal(jax.random.PRNGKey(1), x.shape,
                                                   x.dtype)
             if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
-        publish_variants(registry, "vqi", "v2", bad, cfg)
-        report2 = orch.rollout("vqi", "v2",
-                               validate=lambda a: evaluate(a.session.params, cfg, 1))
+        dep.publish(ModelArtifact.create("vqi", "v2", bad, cfg), SPECS,
+                    calib_data=vqi_calib_batches(cfg, 4),
+                    evaluate=lambda p, c: evaluate(p, c, 2))
+        report2 = dep.rollout("v2",
+                              validate=lambda a: evaluate(a.session.params, cfg, 1))
         print(f"  rollout v2: success={report2.succeeded}")
         print(f"  reason: {report2.reason[:110]}...")
         assert not report2.succeeded, "health gate should reject the bad model"
         # every device must still be serving v1
-        for did, h in orch.status().items():
+        for did, h in dep.status().items():
             assert ":v1:" in h["active"], f"{did} is not back on v1!"
         print("  all devices back on v1 — auto-rollback verified")
 

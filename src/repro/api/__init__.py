@@ -1,0 +1,39 @@
+"""repro.api — the unified EdgeMLOps control-plane surface.
+
+Layers (see DESIGN.md §API):
+    ModelArtifact              one object through the whole lifecycle
+    VariantSpec / QuantRecipe  declarative quantization variants
+    Backend registry           pluggable kernel backends, scoped selection
+    Deployment                 fleet rollout façade
+
+Everything examples / benchmarks / tests need lives here; the modules
+underneath (core.quant, kernels, serving, fleet) are implementation.
+"""
+from repro.api.backends import (Backend, PallasBackend, RefBackend,
+                                available_backends, current_backend,
+                                default_backend, get_backend,
+                                register_backend, set_default_backend,
+                                use_backend)
+from repro.api.variants import DEFAULT_VARIANTS, QuantRecipe, VariantSpec
+from repro.api.artifact import ModelArtifact
+from repro.api.deployment import Deployment
+
+# re-exported so one import serves the common lifecycle scripts
+from repro.fleet.agent import DeviceProfile, EdgeAgent, InstallError
+from repro.fleet.orchestrator import HealthGate, RolloutReport
+from repro.fleet.registry import ArtifactRef, ArtifactRegistry
+from repro.fleet.telemetry import InferenceRecord, TelemetryHub
+from repro.serving.engine import InferenceSession
+
+__all__ = [
+    # artifacts + variants
+    "ModelArtifact", "VariantSpec", "QuantRecipe", "DEFAULT_VARIANTS",
+    # kernel backends
+    "Backend", "RefBackend", "PallasBackend", "register_backend",
+    "get_backend", "available_backends", "use_backend", "current_backend",
+    "default_backend", "set_default_backend",
+    # fleet control plane
+    "Deployment", "ArtifactRegistry", "ArtifactRef", "EdgeAgent",
+    "DeviceProfile", "InstallError", "HealthGate", "RolloutReport",
+    "TelemetryHub", "InferenceRecord", "InferenceSession",
+]

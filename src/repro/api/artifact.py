@@ -1,0 +1,77 @@
+"""``ModelArtifact`` — the one object that travels the EdgeMLOps lifecycle.
+
+Replaces the ``(params, cfg, manifest)`` tuples previously threaded between
+registry, agent, and serving. An artifact is a model *variant*: params +
+config + identity (name/version/variant) + provenance (manifest, metrics,
+registry ref once published/fetched).
+
+    model = ModelArtifact.create("vqi", "v1", params, cfg)
+    published = registry.publish_variants(model, specs, calib_data=...)
+    session = published["static_int8"].session(backend="ref")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ModelArtifact:
+    name: str
+    version: str
+    params: Any
+    config: ModelConfig
+    variant: str = "fp32"
+    manifest: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    ref: Optional[Any] = None          # fleet.registry.ArtifactRef once stored
+
+    @classmethod
+    def create(cls, name: str, version: str, params,
+               config: ModelConfig) -> "ModelArtifact":
+        """An unpublished fp32 artifact, ready for ``publish_variants``."""
+        return cls(name=name, version=version, params=params, config=config)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def key(self) -> str:
+        return f"{self.name}:{self.version}:{self.variant}"
+
+    @property
+    def sha256(self) -> Optional[str]:
+        return self.ref.sha256 if self.ref is not None else None
+
+    @property
+    def size_bytes(self) -> int:
+        if self.ref is not None:
+            return self.ref.size_bytes
+        from repro.core.quant import tree_size_bytes
+
+        return tree_size_bytes(self.params)
+
+    @property
+    def published(self) -> bool:
+        return self.ref is not None
+
+    # ------------------------------------------------------------------ #
+    def with_variant(self, variant: str, params,
+                     metrics: Optional[Dict[str, Any]] = None
+                     ) -> "ModelArtifact":
+        """A sibling artifact: same model identity, different variant params."""
+        return dataclasses.replace(
+            self, variant=variant, params=params, metrics=metrics or {},
+            manifest={}, ref=None)
+
+    def session(self, backend=None):
+        """Build an ``InferenceSession`` serving this artifact, optionally
+        pinned to a kernel backend from the Backend registry."""
+        from repro.serving.engine import InferenceSession
+
+        return InferenceSession.from_artifact(self, backend=backend)
+
+    def __repr__(self) -> str:
+        state = "published" if self.published else "local"
+        return (f"ModelArtifact({self.key}, {state}, "
+                f"{self.size_bytes / 1e6:.2f}MB)")

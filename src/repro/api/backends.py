@@ -1,0 +1,183 @@
+"""Pluggable kernel-backend registry (control-plane API, DESIGN §API).
+
+A ``Backend`` implements the four quantized compute primitives the model
+layers dispatch to (``qmatmul_static`` / ``qmatmul_dynamic`` /
+``quantize_weights`` / ``qdecode``). Three backends ship built-in:
+
+    ref              pure-jnp oracles (fast under XLA on CPU)
+    pallas-interpret Pallas kernels in interpret mode (CPU-debuggable)
+    pallas-tpu       Pallas kernels compiled natively (TPU)
+
+Backend choice is scoped, not global: ``use_backend("ref")`` binds a backend
+for the duration of a trace, and ``InferenceSession(..., backend=...)`` binds
+one per session, so a single process can serve fp32 on one session and
+int8-Pallas on another. The old ``REPRO_FORCE_KERNELS`` env toggle is only
+consulted once, when the process-wide *default* backend is first resolved —
+never in the hot path once a backend is bound.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+from typing import Dict, Iterator, List, Optional, Union
+
+import jax
+
+# NOTE: only the pure-jnp ref module is imported eagerly. The Pallas kernel
+# modules import jax.experimental.pallas at module load, which older/minimal
+# jax builds may lack — PallasBackend defers them to first use so plain fp32
+# serving never requires them (kernels stay optional).
+from repro.kernels import ref as _ref
+
+
+class Backend:
+    """Protocol/base for kernel backends. Subclass and ``register_backend``
+    to plug in a new implementation (e.g. a GPU Triton port)."""
+
+    name: str = "abstract"
+
+    def qmatmul_static(self, x, w_int8, w_scale, act_scale):
+        raise NotImplementedError
+
+    def qmatmul_dynamic(self, x, w_int8, w_scale):
+        raise NotImplementedError
+
+    def quantize_weights(self, w):
+        raise NotImplementedError
+
+    def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<Backend {self.name}>"
+
+
+class RefBackend(Backend):
+    """Pure-jnp reference implementations — identical semantics to the
+    kernels, XLA-compiled (the fast path on CPU hosts)."""
+
+    name = "ref"
+
+    def qmatmul_static(self, x, w_int8, w_scale, act_scale):
+        return _ref.qmatmul_static_ref(x, w_int8, w_scale, act_scale)
+
+    def qmatmul_dynamic(self, x, w_int8, w_scale):
+        return _ref.qmatmul_dynamic_ref(x, w_int8, w_scale)
+
+    def quantize_weights(self, w):
+        return _ref.quantize_ref(w)
+
+    def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
+        return _ref.qdecode_ref(q, k_i8, k_s, v_i8, v_s, bias)
+
+
+class PallasBackend(Backend):
+    """Pallas kernels; ``interpret=True`` runs them on CPU."""
+
+    def __init__(self, name: str, interpret: bool):
+        self.name = name
+        self.interpret = interpret
+
+    def qmatmul_static(self, x, w_int8, w_scale, act_scale):
+        from repro.kernels import qmatmul as _static
+
+        return _static.qmatmul_static(x, w_int8, w_scale, act_scale,
+                                      interpret=self.interpret)
+
+    def qmatmul_dynamic(self, x, w_int8, w_scale):
+        from repro.kernels import dynquant as _dyn
+
+        return _dyn.qmatmul_dynamic(x, w_int8, w_scale,
+                                    interpret=self.interpret)
+
+    def quantize_weights(self, w):
+        from repro.kernels import quantize as _quant
+
+        return _quant.quantize_weights(w, interpret=self.interpret)
+
+    def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
+        from repro.kernels import qdecode as _qd
+
+        return _qd.qdecode_attention(q, k_i8, k_s, v_i8, v_s, bias,
+                                     interpret=self.interpret)
+
+
+# ------------------------------------------------------------------ #
+# Registry
+# ------------------------------------------------------------------ #
+_BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, name: Optional[str] = None) -> Backend:
+    _BACKENDS[name or backend.name] = backend
+    return backend
+
+
+def available_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def get_backend(name: Union[str, Backend]) -> Backend:
+    if isinstance(name, Backend):
+        return name
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel backend {name!r}; registered backends: "
+            f"{', '.join(available_backends())}") from None
+
+
+register_backend(RefBackend())
+register_backend(PallasBackend("pallas-interpret", interpret=True))
+register_backend(PallasBackend("pallas-tpu", interpret=False))
+
+
+# ------------------------------------------------------------------ #
+# Default + scoped selection
+# ------------------------------------------------------------------ #
+_DEFAULT: List[Optional[Backend]] = [None]   # resolved lazily, cached
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_active_backend", default=None)
+
+
+def default_backend() -> Backend:
+    """TPU -> native Pallas; CPU -> ref (XLA-fast), unless the legacy
+    REPRO_FORCE_KERNELS=1 toggle asks for interpret-mode kernels. The env
+    var is read once here, then cached."""
+    if _DEFAULT[0] is None:
+        if jax.default_backend() == "tpu":
+            _DEFAULT[0] = get_backend("pallas-tpu")
+        elif os.environ.get("REPRO_FORCE_KERNELS", "0") == "1":
+            _DEFAULT[0] = get_backend("pallas-interpret")
+        else:
+            _DEFAULT[0] = get_backend("ref")
+    return _DEFAULT[0]
+
+
+def set_default_backend(name: Optional[Union[str, Backend]]) -> None:
+    """Override (or with None: re-resolve) the process-wide default."""
+    _DEFAULT[0] = get_backend(name) if name is not None else None
+
+
+def current_backend() -> Backend:
+    """The backend in scope: innermost ``use_backend`` binding, else the
+    process default. Resolved at *trace* time by the quantized layers, so a
+    jit-compiled function bakes in whichever backend was bound when traced."""
+    active = _ACTIVE.get()
+    return active if active is not None else default_backend()
+
+
+@contextlib.contextmanager
+def use_backend(name: Optional[Union[str, Backend]]) -> Iterator[Backend]:
+    """Bind a backend for the dynamic extent of the block. ``None`` is a
+    no-op (keeps whatever is currently in scope)."""
+    if name is None:
+        yield current_backend()
+        return
+    token = _ACTIVE.set(get_backend(name))
+    try:
+        yield _ACTIVE.get()
+    finally:
+        _ACTIVE.reset(token)

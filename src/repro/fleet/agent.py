@@ -42,12 +42,14 @@ class InstallError(RuntimeError):
 
 class EdgeAgent:
     def __init__(self, device_id: str, registry: ArtifactRegistry,
-                 profile: DeviceProfile = DeviceProfile()):
+                 profile: DeviceProfile = DeviceProfile(), backend=None):
         self.device_id = device_id
         self.registry = registry
         self.profile = profile
+        self.backend = backend          # kernel backend name for this device
         self.installed: List[ArtifactRef] = []     # newest last
         self.active: Optional[ArtifactRef] = None
+        self.artifact = None            # active ModelArtifact
         self.session: Optional[InferenceSession] = None
         self.events: List[Dict[str, Any]] = []
         self.error_count = 0
@@ -71,8 +73,9 @@ class EdgeAgent:
     def activate(self, ref: ArtifactRef) -> None:
         if ref not in self.installed:
             self.install(ref)
-        params, cfg, _ = self.registry.fetch(ref)
-        self.session = InferenceSession(params, cfg)
+        artifact = self.registry.fetch_artifact(ref)
+        self.session = artifact.session(backend=self.backend)
+        self.artifact = artifact
         self.active = ref
         self._log("activated", artifact=ref.key)
 

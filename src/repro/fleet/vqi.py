@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
-from repro.core.quant import CalibrationSession, QuantConfig, quantize_tree
+from repro.api.artifact import ModelArtifact
+from repro.api.variants import VariantSpec
 from repro.data.pipeline import (ASSET_TYPES, CONDITIONS, VQITask, vqi_batch,
                                  vqi_eval_accuracy, vqi_stream)
 from repro.fleet.agent import DeviceProfile, EdgeAgent
@@ -63,30 +64,36 @@ def evaluate(params, cfg: ModelConfig, n_batches: int = 4, batch: int = 64,
             "mean_latency_ms": dt}
 
 
+def vqi_calib_batches(cfg: ModelConfig, n: int = 4, batch: int = 32,
+                      seed: int = 7) -> List[Dict[str, Any]]:
+    """Representative VQI batches for static-int8 calibration."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        out.append(vqi_batch(sub, cfg, TASK, batch))
+    return out
+
+
+def vqi_variant_specs(calib_batches: int = 4) -> List[VariantSpec]:
+    """fp32 + dynamic_int8 + static_int8 (calibrated) — paper §5's three bars."""
+    return [VariantSpec.fp32(),
+            VariantSpec.dynamic_int8(),
+            VariantSpec.static_int8(calib_batches=calib_batches)]
+
+
 def publish_variants(registry: ArtifactRegistry, name: str, version: str,
                      params, cfg: ModelConfig,
                      calib_batches: int = 4) -> Dict[str, Any]:
-    """fp32 + dynamic_int8 + static_int8 (calibrated) — paper §5's three bars."""
-    refs = {}
-    refs["fp32"] = registry.publish(name, version, params, cfg, "fp32",
-                                    metrics=evaluate(params, cfg, 2))
-    qc_dyn = QuantConfig(mode="dynamic_int8", min_size=1024)
-    qp, _ = quantize_tree(params, qc_dyn)
-    refs["dynamic_int8"] = registry.publish(name, version, qp, cfg,
-                                            "dynamic_int8",
-                                            metrics=evaluate(qp, cfg, 2))
-    qc_st = QuantConfig(mode="static_int8", min_size=1024)
-    sess = CalibrationSession(params, qc_st)
-    key = jax.random.PRNGKey(7)
-    for i in range(calib_batches):
-        key, sub = jax.random.split(key)
-        b = vqi_batch(sub, cfg, TASK, 32)
-        jax.block_until_ready(forward(sess.instrumented_params, b, cfg)[0])
-    qp_st, _ = quantize_tree(params, qc_st, sess.act_scales())
-    refs["static_int8"] = registry.publish(name, version, qp_st, cfg,
-                                           "static_int8",
-                                           metrics=evaluate(qp_st, cfg, 2))
-    return refs
+    """Deprecated shim over ``registry.publish_variants`` (returns the old
+    {variant: ArtifactRef} mapping). New code: build a ``ModelArtifact`` and
+    call ``registry.publish_variants(model, specs, ...)`` directly."""
+    model = ModelArtifact.create(name, version, params, cfg)
+    published = registry.publish_variants(
+        model, vqi_variant_specs(calib_batches),
+        calib_data=vqi_calib_batches(cfg, calib_batches),
+        evaluate=lambda p, c: evaluate(p, c, 2))
+    return {variant: art.ref for variant, art in published.items()}
 
 
 # ------------------------------------------------------------------ #
@@ -128,7 +135,7 @@ def inspection_pipeline(agent: EdgeAgent, cfg: ModelConfig,
                 # feedback loop: ship the raw capture back for retraining
                 sample = {"frontend_embeds": raw["frontend_embeds"][i],
                           "tokens": raw["tokens"][i],
-                          "labels": raw.get("labels", [None] * (i + 1))[i]
+                          "labels": raw["labels"][i]
                           if "labels" in raw else None}
             hub.push(InferenceRecord(
                 device_id=agent.device_id,

@@ -1,36 +1,42 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""Public entry points for the quantized compute primitives.
 
-On CPU (this container) kernels run in interpret mode against the same
-BlockSpecs; on TPU they compile natively. ``repro.models.layers.linear``
-calls these for quantized weight leaves.
+These now delegate to the backend in scope via the pluggable registry in
+``repro.api.backends`` (``ref`` / ``pallas-interpret`` / ``pallas-tpu``);
+``repro.models.layers.linear`` calls them for quantized weight leaves, so a
+session traced under ``use_backend(...)`` bakes its backend in. The legacy
+``REPRO_FORCE_KERNELS=1`` env toggle is honoured once, when the process
+default backend is first resolved — not per call.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dynquant as _dyn
-from repro.kernels import qmatmul as _static
-from repro.kernels import quantize as _quant
-from repro.kernels import ref as _ref
 
-
-@functools.lru_cache(maxsize=1)
 def _interpret() -> bool:
+    """Deprecated shim (pre-Backend-registry): whether Pallas kernels should
+    run in interpret mode on this host. Deliberately uncached so a runtime
+    backend change is never served a stale answer."""
     return jax.default_backend() != "tpu"
 
 
 def _use_kernels() -> bool:
-    """Pallas interpret mode is Python-slow; inside large traced models on CPU
-    we route to the (identical-semantics) ref implementation and keep kernel
-    execution for the kernel tests / TPU. Toggle with repro_FORCE_KERNELS=1."""
+    """Deprecated shim: Pallas interpret mode is Python-slow; inside large
+    traced models on CPU we route to the (identical-semantics) ref
+    implementation and keep kernel execution for the kernel tests / TPU.
+    Toggle with REPRO_FORCE_KERNELS=1. Superseded by
+    ``repro.api.backends`` — prefer ``use_backend("pallas-interpret")``."""
     import os
 
     if jax.default_backend() == "tpu":
         return True
     return os.environ.get("REPRO_FORCE_KERNELS", "0") == "1"
+
+
+def _backend():
+    from repro.api.backends import current_backend
+
+    return current_backend()
 
 
 def _flatten_scale(w_scale) -> jax.Array:
@@ -42,32 +48,20 @@ def qmatmul_static(x, w_int8, w_scale, act_scale):
     ws = _flatten_scale(w_scale)
     if ws.shape[1] == 1:
         ws = jnp.broadcast_to(ws, (1, w_int8.shape[1]))
-    if _use_kernels():
-        return _static.qmatmul_static(x, w_int8, ws, act_scale,
-                                      interpret=_interpret())
-    return _ref.qmatmul_static_ref(x, w_int8, ws, act_scale)
+    return _backend().qmatmul_static(x, w_int8, ws, act_scale)
 
 
 def qmatmul_dynamic(x, w_int8, w_scale):
     ws = _flatten_scale(w_scale)
     if ws.shape[1] == 1:
         ws = jnp.broadcast_to(ws, (1, w_int8.shape[1]))
-    if _use_kernels():
-        return _dyn.qmatmul_dynamic(x, w_int8, ws, interpret=_interpret())
-    return _ref.qmatmul_dynamic_ref(x, w_int8, ws)
+    return _backend().qmatmul_dynamic(x, w_int8, ws)
 
 
 def quantize_weights(w):
-    if _use_kernels():
-        return _quant.quantize_weights(w, interpret=_interpret())
-    return _ref.quantize_ref(w)
+    return _backend().quantize_weights(w)
 
 
 def qdecode(q, k_i8, k_s, v_i8, v_s, bias):
     """int8-KV decode attention (fused dequant). q [B,Hkv,G,hd]."""
-    if _use_kernels():
-        from repro.kernels import qdecode as _qd
-
-        return _qd.qdecode_attention(q, k_i8, k_s, v_i8, v_s, bias,
-                                     interpret=_interpret())
-    return _ref.qdecode_ref(q, k_i8, k_s, v_i8, v_s, bias)
+    return _backend().qdecode(q, k_i8, k_s, v_i8, v_s, bias)

@@ -25,6 +25,11 @@ class InferenceStats:
     total_ms: float = 0.0
     latencies_ms: Optional[List[float]] = None
 
+    def reset(self) -> None:
+        self.calls = 0
+        self.total_ms = 0.0
+        self.latencies_ms = []
+
     def record(self, ms: float) -> None:
         self.calls += 1
         self.total_ms += ms
@@ -45,16 +50,44 @@ class InferenceStats:
 
 class InferenceSession:
     """One loaded artifact. Entry points: logits(), generate(), plus the
-    raw prefill/decode pair for the serving loop."""
+    raw prefill/decode pair for the serving loop.
 
-    def __init__(self, params, cfg: ModelConfig):
+    ``backend`` pins the session to a kernel backend from the Backend
+    registry (``repro.api.backends``): the choice is bound while the
+    session's functions trace, so one process can serve fp32 on one session
+    and int8-Pallas on another. ``None`` inherits the process default."""
+
+    def __init__(self, params, cfg: ModelConfig, backend=None):
+        # local import: repro.api.deployment imports the fleet stack, which
+        # imports this module — resolve the backend lazily to stay acyclic
+        from repro.api.backends import get_backend
+
         self.params = params
         self.cfg = cfg
+        self.backend = get_backend(backend) if backend is not None else None
         self.stats = InferenceStats()
-        self._forward = jax.jit(lambda p, b: forward(p, b, cfg)[0])
-        self._prefill = jax.jit(lambda p, b: prefill(p, b, cfg))
-        self._decode = jax.jit(
+        self._forward = self._bind(lambda p, b: forward(p, b, cfg)[0])
+        self._prefill = self._bind(lambda p, b: prefill(p, b, cfg))
+        self._decode = self._bind(
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+
+    @classmethod
+    def from_artifact(cls, artifact, backend=None) -> "InferenceSession":
+        """Serve a ``repro.api.ModelArtifact`` (any quant variant)."""
+        return cls(artifact.params, artifact.config, backend=backend)
+
+    def _bind(self, fn):
+        """jit ``fn`` with this session's backend in scope during tracing,
+        baking the kernel choice into the compiled function."""
+        from repro.api.backends import use_backend
+
+        jitted = jax.jit(fn)
+
+        def call(*args):
+            with use_backend(self.backend):
+                return jitted(*args)
+
+        return call
 
     def logits(self, batch: Dict[str, jax.Array]) -> jax.Array:
         t0 = time.perf_counter()

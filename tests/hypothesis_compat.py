@@ -1,0 +1,67 @@
+"""Import ``given/settings/st`` from here instead of ``hypothesis``.
+
+When hypothesis is installed the real library is used. When it isn't (the
+CI/container image does not bundle it), a deterministic fallback runs each
+property test over a small fixed grid (min / midpoint / max of every
+strategy) instead of erroring at collection and taking the whole suite down
+with it.
+"""
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _StrategiesStub:
+        @staticmethod
+        def integers(lo, hi):
+            mid = (lo + hi) // 2
+            return _Strategy(dict.fromkeys([lo, mid, hi]))
+
+        @staticmethod
+        def floats(lo, hi):
+            # geometric midpoint for positive ranges (matches the log-scale
+            # spread these tests sweep); arithmetic when the range spans <= 0,
+            # where the geometric mean would be complex
+            mid = (lo * hi) ** 0.5 if lo > 0 else (lo + hi) / 2.0
+            return _Strategy(dict.fromkeys([lo, mid, hi]))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(xs)
+
+    st = _StrategiesStub()
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**strategies):
+        """Run the test over the per-strategy sample grid, zipped with
+        cycling so the case count stays at max(len(samples)) not the
+        cartesian product."""
+        def deco(fn):
+            def run():
+                n = max(len(s.samples) for s in strategies.values())
+                cycles = {k: itertools.cycle(s.samples)
+                          for k, s in strategies.items()}
+                for _ in range(n):
+                    fn(**{k: next(c) for k, c in cycles.items()})
+            # plain attribute copy — functools.wraps would set __wrapped__
+            # and pytest would then see the original signature and demand
+            # fixtures for the strategy arguments
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco

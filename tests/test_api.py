@@ -1,0 +1,204 @@
+"""repro.api surface tests: ModelArtifact lifecycle (install -> activate ->
+rollback, admission rejection, sha256 integrity), declarative VariantSpec
+publishing, and the pluggable kernel-backend registry."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro import configs as C
+from repro.api import (ArtifactRegistry, Deployment, DeviceProfile, EdgeAgent,
+                       InferenceSession, InstallError, ModelArtifact,
+                       QuantRecipe, VariantSpec, available_backends,
+                       get_backend, use_backend)
+from repro.models import init_params
+
+SPECS = [VariantSpec.fp32(), VariantSpec.dynamic_int8(),
+         VariantSpec.static_int8(calib_batches=2)]
+
+
+@pytest.fixture
+def setup(tmp_path):
+    cfg = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    registry = ArtifactRegistry(str(tmp_path / "registry"))
+    return cfg, params, registry
+
+
+def _calib(cfg, n=2):
+    return [make_batch(cfg, seed=100 + i) for i in range(n)]
+
+
+# --------------------------------------------------------------------- #
+# VariantSpec / publish_variants
+# --------------------------------------------------------------------- #
+def test_publish_variants_declarative(setup):
+    cfg, params, registry = setup
+    model = ModelArtifact.create("m", "v1", params, cfg)
+    published = registry.publish_variants(model, SPECS,
+                                          calib_data=_calib(cfg))
+    assert set(published) == {"fp32", "dynamic_int8", "static_int8"}
+    for art in published.values():
+        assert art.published and art.sha256
+    assert published["fp32"].size_bytes > 2 * published["static_int8"].size_bytes
+    # static calibration actually ran: at least one act_scale leaf
+    leaves = jax.tree_util.tree_flatten_with_path(
+        published["static_int8"].params)[0]
+    assert any(str(p[-1].key) == "act_scale" for p, _ in leaves)
+
+
+def test_published_and_fetched_manifests_match(setup):
+    cfg, params, registry = setup
+    published = registry.publish_variants(
+        ModelArtifact.create("m", "v1", params, cfg), [VariantSpec.fp32()])
+    fetched = registry.get("m", "v1", "fp32")
+    assert published["fp32"].manifest.keys() == fetched.manifest.keys()
+    assert published["fp32"].manifest["sha256"] == fetched.manifest["sha256"]
+
+
+def test_latest_version_is_publication_order_not_lexicographic(setup):
+    cfg, params, registry = setup
+    for v in [f"v{i}" for i in range(1, 11)]:       # v1 .. v10
+        registry.publish_variants(ModelArtifact.create("m", v, params, cfg),
+                                  [VariantSpec.fp32()])
+    assert registry.versions("m")[-1] == "v10"
+    assert registry.get("m").version == "v10"
+
+
+def test_static_spec_requires_calib_data(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="calib_data"):
+        VariantSpec.static_int8().build(params, cfg)
+
+
+def test_quant_recipe_maps_to_quant_config():
+    qc = QuantRecipe(mode="dynamic_int8", granularity="per_group",
+                     group_size=64, bits=4).to_quant_config()
+    assert (qc.granularity, qc.group_size, qc.bits) == ("per_group", 64, 4)
+
+
+def test_registry_ref_error_lists_published_variants(setup):
+    cfg, params, registry = setup
+    registry.publish_variants(ModelArtifact.create("m", "v1", params, cfg),
+                              [VariantSpec.fp32()])
+    with pytest.raises(KeyError, match="published variants: fp32"):
+        registry.ref("m", "v1", "static_int8")
+
+
+# --------------------------------------------------------------------- #
+# Device lifecycle through the ModelArtifact API
+# --------------------------------------------------------------------- #
+def test_lifecycle_install_activate_rollback(setup):
+    cfg, params, registry = setup
+    v1 = registry.publish_variants(
+        ModelArtifact.create("m", "v1", params, cfg), [VariantSpec.fp32()])
+    bumped = jax.tree.map(lambda x: x * 1.01 if jnp.issubdtype(
+        x.dtype, jnp.floating) else x, params)
+    v2 = registry.publish_variants(
+        ModelArtifact.create("m", "v2", bumped, cfg), [VariantSpec.fp32()])
+
+    agent = EdgeAgent("dev-0", registry, DeviceProfile(memory_bytes=10**10),
+                      backend="ref")
+    agent.activate(v1["fp32"].ref)
+    assert agent.artifact.key == "m:v1:fp32"
+    batch = make_batch(cfg)
+    out1 = agent.infer(batch)
+    agent.activate(v2["fp32"].ref)
+    assert agent.artifact.version == "v2"
+    prev = agent.rollback()
+    assert prev.version == "v1" and agent.artifact.version == "v1"
+    out2 = agent.infer(batch)
+    assert bool(jnp.all(out1 == out2)), "rollback must restore v1 behaviour"
+    assert "rollback" in [e["kind"] for e in agent.events]
+
+
+def test_lifecycle_admission_rejection_constrained_profile(setup):
+    cfg, params, registry = setup
+    published = registry.publish_variants(
+        ModelArtifact.create("m", "v1", params, cfg), SPECS,
+        calib_data=_calib(cfg))
+    pi4 = DeviceProfile("edge-pi4-4gb", 4 * 1024**3,
+                        allowed_variants=("static_int8", "dynamic_int8"))
+    agent = EdgeAgent("dev-pi", registry, pi4)
+    with pytest.raises(InstallError, match="variant fp32 not allowed"):
+        agent.install(published["fp32"].ref)
+    assert [e["kind"] for e in agent.events] == ["install_rejected"]
+    # but the int8 variant is admissible
+    agent.activate(published["static_int8"].ref)
+    assert agent.artifact.variant == "static_int8"
+
+
+def test_registry_integrity_failure_through_artifact_api(setup):
+    cfg, params, registry = setup
+    published = registry.publish_variants(
+        ModelArtifact.create("m", "v1", params, cfg), [VariantSpec.fp32()])
+    ref = published["fp32"].ref
+    wpath = os.path.join(registry._index[ref.key]["dir"], "weights.npz")
+    with open(wpath, "r+b") as f:
+        f.seek(100)
+        f.write(b"XX")
+    with pytest.raises(IOError, match="sha"):
+        registry.fetch_artifact(ref)
+    agent = EdgeAgent("dev-0", registry, DeviceProfile(memory_bytes=10**10))
+    with pytest.raises(IOError, match="sha"):
+        agent.install(ref)
+
+
+def test_deployment_facade(setup):
+    cfg, params, registry = setup
+    dep = Deployment(registry, model="m")
+    dep.add_device("big", DeviceProfile("std", 8 * 1024**3))
+    dep.add_device("small",
+                   DeviceProfile("pi4", 4 * 1024**3,
+                                 allowed_variants=("static_int8",
+                                                   "dynamic_int8")))
+    dep.publish(ModelArtifact.create("m", "v1", params, cfg), SPECS,
+                calib_data=_calib(cfg))
+    report = dep.rollout(validate=lambda a: {"accuracy": 1.0,
+                                             "mean_latency_ms": 1.0})
+    assert report.succeeded and report.version == "v1"
+    st = dep.status()
+    assert st["big"]["active"].endswith(":fp32")
+    assert st["small"]["active"].endswith(":static_int8")
+    assert dep.active_versions() == {"big": "v1", "small": "v1"}
+    with pytest.raises(ValueError, match="manages 'm'"):
+        dep.publish(ModelArtifact.create("other", "v1", params, cfg), SPECS)
+
+
+# --------------------------------------------------------------------- #
+# Kernel-backend registry
+# --------------------------------------------------------------------- #
+def test_backend_registry_surface():
+    for name in ("ref", "pallas-interpret", "pallas-tpu"):
+        assert name in available_backends()
+        assert get_backend(name).name == name
+    with pytest.raises(KeyError, match="registered backends"):
+        get_backend("cuda-imaginary")
+
+
+def test_use_backend_scoping():
+    from repro.api.backends import current_backend
+
+    with use_backend("pallas-interpret"):
+        assert current_backend().name == "pallas-interpret"
+        with use_backend("ref"):
+            assert current_backend().name == "ref"
+        assert current_backend().name == "pallas-interpret"
+
+
+def test_per_session_backend_selection(setup):
+    """Two sessions over the same int8 artifact, one per backend, in one
+    process — results must agree (ref vs pallas-interpret semantics)."""
+    cfg, params, _ = setup
+    qparams, _ = VariantSpec.dynamic_int8().build(params, cfg)
+    batch = make_batch(cfg)
+    s_ref = InferenceSession(qparams, cfg, backend="ref")
+    s_pal = InferenceSession(qparams, cfg, backend="pallas-interpret")
+    assert s_ref.backend.name == "ref"
+    assert s_pal.backend.name == "pallas-interpret"
+    np.testing.assert_allclose(np.asarray(s_ref.logits(batch)),
+                               np.asarray(s_pal.logits(batch)),
+                               rtol=1e-3, atol=1e-3)

@@ -28,7 +28,11 @@ def test_scan_multiplies_by_trip_count():
     a = analyze_hlo(c.as_text())
     assert a["flops"] == 10 * MATMUL_FLOPS
     # and the raw XLA number demonstrates the undercount we correct
-    assert c.cost_analysis()["flops"] < 2 * MATMUL_FLOPS
+    # (older jax returns cost_analysis() as a one-element list)
+    cost = c.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    assert cost["flops"] < 2 * MATMUL_FLOPS
 
 
 def test_nested_scan():
