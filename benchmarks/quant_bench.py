@@ -14,7 +14,7 @@ Run via ``python -m benchmarks.run``.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,11 +53,14 @@ def build_variants(cfg, params) -> Dict[str, ModelArtifact]:
     return out
 
 
-def run(iters: int = 10) -> List[str]:
+def run(iters: int = 10) -> Tuple[List[str], Dict[str, Any]]:
+    """Returns (CSV lines for stdout, structured payload for
+    ``BENCH_quant.json`` via benchmarks/report.py)."""
     cfg = _cfg()
     params = init_params(jax.random.PRNGKey(0), cfg)
     variants = build_variants(cfg, params)
     lines = []
+    results: Dict[str, Dict[str, float]] = {n: {} for n in variants}
 
     lat: Dict[str, List[float]] = {}
     logits: Dict[str, jax.Array] = {}
@@ -73,10 +76,16 @@ def run(iters: int = 10) -> List[str]:
     # fig6a: average inference time
     for name, ts in lat.items():
         mean_us = sum(ts) / len(ts)
+        results[name]["mean_us"] = mean_us
+        results[name]["speedup_vs_fp32"] = (
+            sum(lat["fp32"]) / len(lat["fp32"]) / mean_us)
         lines.append(f"quant_fig6a_{name},{mean_us:.0f},"
-                     f"speedup_vs_fp32={sum(lat['fp32'])/len(lat['fp32'])/mean_us:.2f}x")
+                     f"speedup_vs_fp32={results[name]['speedup_vs_fp32']:.2f}x")
     # fig6b: distribution
     for name, ts in lat.items():
+        results[name].update(p10_us=ts[len(ts) // 10],
+                             p50_us=ts[len(ts) // 2],
+                             p90_us=ts[9 * len(ts) // 10])
         lines.append(
             f"quant_fig6b_{name},{ts[len(ts)//2]:.0f},"
             f"p10={ts[len(ts)//10]:.0f}us p90={ts[9*len(ts)//10]:.0f}us")
@@ -84,6 +93,7 @@ def run(iters: int = 10) -> List[str]:
     base = variants["fp32"].size_bytes
     for name, artifact in variants.items():
         sz = artifact.size_bytes
+        results[name].update(size_bytes=sz, size_reduction=base / sz)
         lines.append(f"quant_size_{name},{sz},reduction={base/sz:.2f}x")
     # accuracy proxy: top-1 agreement + logit cosine vs fp32
     ref = logits["fp32"]
@@ -92,6 +102,9 @@ def run(iters: int = 10) -> List[str]:
         top1 = float(jnp.mean(jnp.argmax(l, -1) == jnp.argmax(ref, -1)))
         cos = float(jnp.sum(l * ref) /
                     (jnp.linalg.norm(l) * jnp.linalg.norm(ref)))
+        results[name].update(top1_agreement_pct=top1 * 100, cosine_vs_fp32=cos)
         lines.append(f"quant_accuracy_{name},{top1*100:.1f},"
                      f"top1_agreement_pct cosine={cos:.5f}")
-    return lines
+    payload = {"arch": BENCH_ARCH, "backend": BACKEND, "iters": iters,
+               "variants": results}
+    return lines, payload

@@ -1,0 +1,53 @@
+"""Shared machine-readable benchmark report writer.
+
+Every benchmark section that feeds the perf trajectory emits a
+``BENCH_<name>.json`` through ``write_report`` so the schema stays uniform
+across sections and PRs (documented in DESIGN.md §BENCH schema):
+
+    {
+      "schema_version": 1,
+      "bench": "serving",
+      "env":     {"jax": "...", "python": "...", "platform": "cpu"},
+      "config":  {...}   # knobs that shaped the run (arch, slots, trace seed)
+      "results": {...}   # numeric metrics, nested by variant/section
+    }
+
+Keys are sorted and floats written as plain JSON numbers, so two reports
+diff cleanly and ``scripts/compare_bench.py`` can gate regressions in CI.
+"""
+from __future__ import annotations
+
+import json
+import platform
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+SCHEMA_VERSION = 1
+
+
+def make_report(bench: str, results: Dict[str, Any],
+                config: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    import jax
+
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "bench": bench,
+        "env": {
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "platform": jax.default_backend(),
+        },
+        "config": config or {},
+        "results": results,
+    }
+
+
+def write_report(out_dir, bench: str, results: Dict[str, Any],
+                 config: Optional[Dict[str, Any]] = None) -> Path:
+    """Write ``BENCH_<bench>.json`` under ``out_dir``; returns the path."""
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"BENCH_{bench}.json"
+    report = make_report(bench, results, config)
+    path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    return path

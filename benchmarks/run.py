@@ -1,13 +1,18 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--skip-roofline] \
+        [--json OUT_DIR]
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; with ``--json`` also writes the
+machine-readable ``BENCH_quant.json`` / ``BENCH_serving.json`` reports
+(benchmarks/report.py schema) that CI uploads as artifacts and
+``scripts/compare_bench.py`` diffs against a baseline.
   quant_fig6a_*    paper Fig 6a (average inference time, 3 variants)
   quant_fig6b_*    paper Fig 6b (latency distribution)
   quant_size_*     paper text: ~4x size reduction
   quant_accuracy_* paper text: small accuracy degradation
   lifecycle_*      paper §4 lifecycle operations
+  serving_cb_*     continuous-batching v2 engine under seeded open-loop load
   roofline_*       deliverable (g): per (arch x shape x mesh) dry-run terms
 """
 import argparse
@@ -18,12 +23,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--json", metavar="OUT_DIR", default=None,
+                    help="also write BENCH_*.json reports into OUT_DIR")
     args = ap.parse_args()
 
-    from benchmarks import lifecycle_bench, quant_ablation, quant_bench, roofline
+    from benchmarks import lifecycle_bench, quant_ablation, quant_bench
+    from benchmarks.report import write_report
 
     print("name,us_per_call,derived")
-    for line in quant_bench.run(iters=4 if args.fast else 10):
+    quant_lines, quant_payload = quant_bench.run(iters=4 if args.fast else 10)
+    for line in quant_lines:
         print(line)
     sys.stdout.flush()
     for line in quant_ablation.run():
@@ -34,9 +43,21 @@ def main() -> None:
     sys.stdout.flush()
     from benchmarks import serving_bench
 
-    for line in serving_bench.run():
+    serving_lines, serving_payload = serving_bench.run(fast=args.fast)
+    for line in serving_lines:
         print(line)
+    sys.stdout.flush()
+    if args.json:
+        for bench, payload in (("quant", quant_payload),
+                               ("serving", serving_payload)):
+            config = {k: v for k, v in payload.items() if k != "variants"}
+            config["fast"] = args.fast
+            path = write_report(args.json, bench,
+                                {"variants": payload["variants"]}, config)
+            print(f"# wrote {path}", file=sys.stderr)
     if not args.skip_roofline:
+        from benchmarks import roofline
+
         for line in roofline.run():
             print(line)
 

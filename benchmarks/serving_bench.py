@@ -1,35 +1,69 @@
-"""Continuous-batching serving benchmark (beyond-paper serving layer)."""
+"""Continuous-batching serving benchmark (beyond-paper serving layer).
+
+v2: the numbers come from the backend-pinned ``ContinuousBatchingEngine`` —
+an fp32 engine and a dynamic-int8 engine coexist in one process, each built
+from a ``ModelArtifact`` variant and pinned to the same kernel backend —
+replaying one seeded open-loop ``ArrivalTrace`` (identical offered load per
+variant). Returns CSV lines for stdout plus a structured payload for
+``BENCH_serving.json`` (benchmarks/report.py).
+"""
 from __future__ import annotations
 
-from typing import List
+from typing import Any, Dict, List, Tuple
 
 import jax
 
 from repro import configs as C
-from repro.api import VariantSpec
+from repro.api import ModelArtifact, VariantSpec
 from repro.models import init_params
-from repro.serving.scheduler import ContinuousBatchingEngine
+from repro.serving import ArrivalTrace, ContinuousBatchingEngine, replay
+
+ARCH = "mistral-nemo-12b"
+BACKEND = "ref"            # per-engine kernel backend (TPU: "pallas-tpu")
+N_SLOTS = 4
+MAX_LEN = 96
+PREFILL_CHUNK = 6          # chunked prefill: long prompts no longer stall decode
+TRACE_SEED = 7
 
 
-def run() -> List[str]:
-    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+def build_variants(cfg, params) -> Dict[str, ModelArtifact]:
+    model = ModelArtifact.create(ARCH, "bench", params, cfg)
+    int8, _ = VariantSpec.dynamic_int8().build(params, cfg)
+    return {"fp32": model,
+            "int8_dynamic": model.with_variant("int8_dynamic", int8)}
+
+
+def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
+    cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    params, _ = VariantSpec.dynamic_int8().build(params, cfg)
-    engine = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=96)
-    key = jax.random.PRNGKey(7)
-    reqs = []
-    for i in range(10):
-        key, sub = jax.random.split(key)
-        prompt = jax.random.randint(sub, (1, 4 + (i % 5) * 3),
-                                    0, cfg.vocab_size)
-        reqs.append(engine.submit(prompt, max_new_tokens=4 + (i * 7) % 12))
-    engine.run()
-    m = engine.metrics(reqs)
-    naive = sum(r.max_new_tokens for r in reqs)
-    return [
-        f"serving_cb_decode_steps,{engine.steps},"
-        f"sequential_equiv={naive} batching_gain={naive/engine.steps:.2f}x",
-        f"serving_cb_ttft,{m['mean_ttft_s']*1e6:.0f},"
-        f"throughput={m['throughput_tok_s']:.1f}tok_s "
-        f"completed={m['completed']}",
-    ]
+    n_requests = 8 if fast else 16
+    trace = ArrivalTrace.generate(cfg, n_requests=n_requests, seed=TRACE_SEED,
+                                  mean_interarrival=2.0,
+                                  prompt_len=(4, 16), max_new=(4, 12))
+    lines: List[str] = []
+    results: Dict[str, Any] = {}
+    for name, artifact in build_variants(cfg, params).items():
+        engine = ContinuousBatchingEngine(
+            artifact, n_slots=N_SLOTS, max_len=MAX_LEN, backend=BACKEND,
+            prefill_chunk=PREFILL_CHUNK)
+        engine.warmup()   # compile outside the measurement window
+        report = replay(engine, trace)
+        results[name] = report
+        naive = trace.offered_tokens
+        lines.append(
+            f"serving_cb_{name}_decode_steps,{report['decode_steps']},"
+            f"sequential_equiv={naive} "
+            f"batching_gain={naive / max(report['decode_steps'], 1):.2f}x")
+        lines.append(
+            f"serving_cb_{name}_ttft,{report['mean_ttft_s'] * 1e6:.0f},"
+            f"throughput={report['throughput_tok_s']:.1f}tok_s "
+            f"completed={report['completed']}")
+    payload = {
+        "arch": ARCH,
+        "backend": BACKEND,
+        "n_slots": N_SLOTS,
+        "max_len": MAX_LEN,
+        "prefill_chunk": PREFILL_CHUNK,
+        "variants": results,
+    }
+    return lines, payload

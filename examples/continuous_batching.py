@@ -1,42 +1,66 @@
-"""Continuous-batching serving demo: a stream of variable-length requests
-shares a fixed decode-slot pool; slots are reused the moment a sequence
-finishes (no batch barrier). Runs the quantized artifact end-to-end.
+"""Continuous-batching serving v2 demo: two backend-pinned engines (fp32 and
+dynamic-int8 variants of one ModelArtifact) coexist in one process; requests
+stream tokens via callbacks, mix sampling policies and priorities, and long
+prompts are chunk-prefilled so they never stall in-flight decodes. A strict
+queue depth shows admission control rejecting overload.
 
     PYTHONPATH=src python examples/continuous_batching.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro import configs as C
-from repro.api import VariantSpec
+from repro.api import (ContinuousBatchingEngine, ModelArtifact,
+                       SamplingParams, VariantSpec)
 from repro.models import init_params
-from repro.serving.scheduler import ContinuousBatchingEngine
 
 
 def main():
     cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    params, info = VariantSpec.dynamic_int8().build(params, cfg)
-    print(f"serving dynamic-int8 artifact "
-          f"({len(info['quantized_paths'])} quantized tensors)")
+    model = ModelArtifact.create("demo", "v1", params, cfg)
+    int8_params, info = VariantSpec.dynamic_int8().build(params, cfg)
+    int8 = model.with_variant("int8_dynamic", int8_params)
+    print(f"artifacts: {model.key} + {int8.key} "
+          f"({len(info['quantized_paths'])} quantized tensors), "
+          f"both pinned to the 'ref' kernel backend in one process")
 
-    engine = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=96)
+    engines = {
+        name: ContinuousBatchingEngine(art, n_slots=4, max_len=96,
+                                       backend="ref", prefill_chunk=6,
+                                       max_queue_depth=8)
+        for name, art in (("fp32", model), ("int8_dynamic", int8))
+    }
+
     key = jax.random.PRNGKey(7)
-    reqs = []
-    for i in range(10):
-        key, sub = jax.random.split(key)
-        prompt = jax.random.randint(sub, (1, 4 + (i % 5) * 3), 0, cfg.vocab_size)
-        reqs.append(engine.submit(prompt, max_new_tokens=4 + (i * 7) % 12))
-    engine.run()
-    assert all(r.done for r in reqs)
-    m = engine.metrics(reqs)
-    naive_steps = sum(r.max_new_tokens for r in reqs)
-    print(f"completed {m['completed']} requests in {engine.steps} decode steps "
-          f"(sequential would take {naive_steps})")
-    print(f"mean TTFT {m['mean_ttft_s']*1e3:.0f} ms, "
-          f"throughput {m['throughput_tok_s']:.1f} tok/s")
-    for r in reqs[:3]:
-        print(f"  req {r.rid}: prompt {r.tokens.shape[1]} toks -> {r.out_tokens}")
+    streamed = []
+    for name, engine in engines.items():
+        reqs = []
+        for i in range(10):
+            key, sub = jax.random.split(key)
+            prompt = jax.random.randint(sub, (1, 4 + (i % 5) * 3),
+                                        0, cfg.vocab_size)
+            sampling = (SamplingParams(temperature=0.7, top_k=20, seed=i)
+                        if i % 3 == 0 else SamplingParams.greedy())
+            reqs.append(engine.submit(
+                prompt, max_new_tokens=4 + (i * 7) % 12,
+                sampling=sampling, priority=i % 2,
+                on_token=lambda r, t: streamed.append((name, r.rid, t))))
+        engine.run()
+        assert all(r.done for r in reqs if not r.rejected)
+        m = engine.metrics(reqs)
+        naive_steps = sum(r.max_new_tokens for r in reqs if not r.rejected)
+        print(f"[{name}] completed {m['completed']} requests in "
+              f"{engine.steps} decode steps (sequential: {naive_steps}); "
+              f"chunked prefill processed {m['prefill_tokens']} prompt "
+              f"tokens batch-1, the rest rode the batched decode")
+        print(f"[{name}] mean TTFT {m['mean_ttft_s']*1e3:.0f} ms, "
+              f"throughput {m['throughput_tok_s']:.1f} tok/s, "
+              f"rejected {m['rejected']}")
+        for r in reqs[:3]:
+            tag = "sampled" if not r.sampling.is_greedy else "greedy"
+            print(f"  req {r.rid} ({tag}, prio {r.priority}): "
+                  f"prompt {r.prompt_len} toks -> {r.out_tokens}")
+    print(f"streamed {len(streamed)} tokens via on_token callbacks")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Diff two ``BENCH_*.json`` reports and gate on perf regressions.
+
+    python scripts/compare_bench.py BASELINE.json CANDIDATE.json \
+        [--threshold 0.20]
+
+Walks both reports (benchmarks/report.py schema), pairs every numeric metric
+that exists at the same path in both, and fails (exit 1) when a *gated*
+metric regresses by more than ``--threshold`` (default 20%):
+
+    throughput_tok_s   lower is worse
+    mean_ttft_s        higher is worse
+
+All other shared metrics are printed as informational deltas. Deliberately
+dependency-free and repo-import-free so CI can run it against a downloaded
+baseline artifact from any checkout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+#: metric leaf name -> direction ("higher"/"lower" = which way is better)
+GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower"}
+
+
+def flatten(node, prefix: str = "") -> Dict[str, float]:
+    """Nested dicts -> {dotted.path: numeric leaf}; non-numerics dropped."""
+    out: Dict[str, float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(flatten(v, f"{prefix}{k}." if prefix or k else k))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix.rstrip(".")] = float(node)
+    return out
+
+
+def compare(baseline: dict, candidate: dict, threshold: float):
+    """Returns (regressions, improvements, infos, n_gated_pairs) — report
+    lines plus how many gated metrics were actually paired. Zero pairs
+    means the reports don't overlap (renamed variants, schema drift, empty
+    results) and MUST fail the gate rather than silently pass."""
+    base = flatten(baseline.get("results", baseline))
+    cand = flatten(candidate.get("results", candidate))
+    regressions, improvements, infos = [], [], []
+    n_gated = 0
+    for path in sorted(set(base) & set(cand)):
+        old, new = base[path], cand[path]
+        leaf = path.rsplit(".", 1)[-1]
+        if leaf not in GATED:
+            continue
+        n_gated += 1
+        if old == 0:
+            infos.append(f"  {path}: baseline 0, candidate {new:g} (skipped)")
+            continue
+        rel = (new - old) / abs(old)
+        worse = rel < -threshold if GATED[leaf] == "higher" else rel > threshold
+        line = f"  {path}: {old:g} -> {new:g} ({rel:+.1%})"
+        if worse:
+            regressions.append(line)
+        elif abs(rel) > threshold:
+            improvements.append(line)
+        else:
+            infos.append(line)
+    return regressions, improvements, infos, n_gated
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated relative regression (default 0.20)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    regressions, improvements, infos, n_gated = compare(baseline, candidate,
+                                                        args.threshold)
+    if n_gated == 0:
+        print("ERROR: no gated metric (throughput_tok_s / mean_ttft_s) "
+              "exists at a shared path in both reports — nothing was "
+              "compared. Schema drift or an empty benchmark run.")
+        return 2
+    if infos:
+        print("within threshold:")
+        print("\n".join(infos))
+    if improvements:
+        print("improvements:")
+        print("\n".join(improvements))
+    if regressions:
+        print(f"REGRESSIONS (> {args.threshold:.0%}):")
+        print("\n".join(regressions))
+        return 1
+    print("no gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

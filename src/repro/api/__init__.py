@@ -24,6 +24,9 @@ from repro.fleet.orchestrator import HealthGate, RolloutReport
 from repro.fleet.registry import ArtifactRef, ArtifactRegistry
 from repro.fleet.telemetry import InferenceRecord, TelemetryHub
 from repro.serving.engine import InferenceSession
+from repro.serving.loadgen import ArrivalTrace, TracedRequest, replay
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import ContinuousBatchingEngine, GenRequest
 
 __all__ = [
     # artifacts + variants
@@ -32,6 +35,9 @@ __all__ = [
     "Backend", "RefBackend", "PallasBackend", "register_backend",
     "get_backend", "available_backends", "use_backend", "current_backend",
     "default_backend", "set_default_backend",
+    # serving v2 (backend-pinned continuous batching + load generation)
+    "ContinuousBatchingEngine", "GenRequest", "SamplingParams",
+    "ArrivalTrace", "TracedRequest", "replay",
     # fleet control plane
     "Deployment", "ArtifactRegistry", "ArtifactRef", "EdgeAgent",
     "DeviceProfile", "InstallError", "HealthGate", "RolloutReport",

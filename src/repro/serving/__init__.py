@@ -1,2 +1,4 @@
 from repro.serving.engine import InferenceSession, Pipeline, Request, RequestQueue
-from repro.serving.scheduler import ContinuousBatchingEngine, GenRequest
+from repro.serving.loadgen import ArrivalTrace, TracedRequest, replay
+from repro.serving.sampling import SamplingParams, sample
+from repro.serving.scheduler import METRIC_KEYS, ContinuousBatchingEngine, GenRequest

@@ -1,0 +1,100 @@
+"""Deterministic open-loop load generator for the serving v2 engine.
+
+An ``ArrivalTrace`` is a seeded, fully reproducible request schedule:
+prompts, lengths, decode budgets and arrival times are all derived from one
+PRNG key, so two runs (or two variants of the same model) replay the *same*
+offered load. Arrivals are open-loop — requests arrive on the virtual clock
+whether or not the engine keeps up — which is what makes saturation and
+admission-control behaviour (queue growth, rejections) observable.
+
+The virtual clock advances one tick per scheduler loop iteration; one tick
+is one batched decode step when the engine has work, and an idle tick
+otherwise. ``replay()`` returns the engine's stable ``metrics()`` schema
+plus trace metadata, ready for ``benchmarks/report.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedRequest:
+    arrival_step: int                  # virtual-clock tick of arrival
+    tokens: jax.Array                  # [1, S] prompt
+    max_new_tokens: int
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    priority: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalTrace:
+    requests: Tuple[TracedRequest, ...]
+    seed: int
+    mean_interarrival: float
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    @property
+    def offered_tokens(self) -> int:
+        return sum(r.max_new_tokens for r in self.requests)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def generate(cls, cfg: ModelConfig, n_requests: int, seed: int = 0,
+                 mean_interarrival: float = 2.0,
+                 prompt_len: Tuple[int, int] = (4, 16),
+                 max_new: Tuple[int, int] = (4, 12),
+                 sampling: Optional[SamplingParams] = None) -> "ArrivalTrace":
+        """Poisson-process arrivals (exponential inter-arrival gaps via
+        inverse-CDF on seeded uniforms, floored to whole ticks) with
+        uniformly drawn prompt lengths and decode budgets."""
+        key = jax.random.PRNGKey(seed)
+        reqs: List[TracedRequest] = []
+        t = 0
+        for i in range(n_requests):
+            ka, kl, kn, kp = jax.random.split(jax.random.fold_in(key, i), 4)
+            u = float(jax.random.uniform(ka, minval=1e-6, maxval=1.0))
+            t += int(-mean_interarrival * math.log(u))
+            s = int(jax.random.randint(kl, (), prompt_len[0],
+                                       prompt_len[1] + 1))
+            n = int(jax.random.randint(kn, (), max_new[0], max_new[1] + 1))
+            prompt = jax.random.randint(kp, (1, s), 0, cfg.vocab_size)
+            reqs.append(TracedRequest(t, prompt, n,
+                                      sampling or SamplingParams()))
+        return cls(tuple(reqs), seed, mean_interarrival)
+
+
+def replay(engine, trace: ArrivalTrace, max_ticks: int = 100_000
+           ) -> Dict[str, float]:
+    """Drive ``engine`` through ``trace`` on a virtual clock and return the
+    stable metrics schema (see scheduler.METRIC_KEYS) + trace metadata."""
+    reqs = []
+    i = 0
+    clock = 0
+    while (i < len(trace.requests) or engine.has_work) and clock < max_ticks:
+        while (i < len(trace.requests)
+               and trace.requests[i].arrival_step <= clock):
+            tr = trace.requests[i]
+            reqs.append(engine.submit(tr.tokens, tr.max_new_tokens,
+                                      sampling=tr.sampling,
+                                      priority=tr.priority))
+            i += 1
+        engine.step()
+        clock += 1
+    report = engine.metrics(reqs)
+    report.update(
+        trace_requests=len(trace.requests),
+        trace_seed=trace.seed,
+        trace_mean_interarrival=trace.mean_interarrival,
+        offered_tokens=trace.offered_tokens,
+        clock_ticks=clock,
+    )
+    return report

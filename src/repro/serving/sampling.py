@@ -1,0 +1,74 @@
+"""Per-request sampling policies for the serving v2 engine.
+
+A ``SamplingParams`` travels with each request through the continuous-batching
+scheduler; ``sample()`` turns one slot's last-position logits into the next
+token. Everything is seeded and deterministic: the key for the i-th generated
+token is ``fold_in(PRNGKey(seed), i)``, so a request's token stream does not
+depend on which other requests share the batch, when it was admitted, or which
+slot it landed in — the property the scheduler determinism tests pin down.
+
+``temperature == 0`` (the default) is exact greedy argmax, bit-identical to
+``InferenceSession.generate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Decoding policy for one request.
+
+    temperature  0.0 -> greedy argmax; >0 softmax-temperature sampling
+    top_k        0 -> full vocabulary; >0 restrict to the k best logits
+    seed         base of the per-token PRNG stream (deterministic replay)
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @classmethod
+    def greedy(cls) -> "SamplingParams":
+        return cls()
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def key_for(self, token_index: int) -> jax.Array:
+        """PRNG key for the ``token_index``-th generated token of a request.
+        Depends only on (seed, token_index) — never on batch composition."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), token_index)
+
+
+def _sample_row(logits: jax.Array, params: SamplingParams,
+                key: jax.Array) -> jax.Array:
+    """logits [V] -> scalar int32 token."""
+    if params.is_greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0 and params.top_k < scaled.shape[-1]:
+        kth = jnp.sort(scaled)[-params.top_k]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, params: SamplingParams,
+           token_index: int) -> jax.Array:
+    """Sample the next token from one slot's last-position logits.
+
+    logits: [V] (text) or [K, V] (multi-codebook audio). Returns an int32
+    scalar, or an int32 [K] vector with one draw per codebook (each codebook
+    gets its own fold of the per-token key so draws are independent)."""
+    if params.is_greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = params.key_for(token_index)
+    if logits.ndim == 1:
+        return _sample_row(logits, params, key)
+    keys = jax.random.split(key, logits.shape[0])
+    return jnp.stack([_sample_row(logits[k], params, keys[k])
+                      for k in range(logits.shape[0])])

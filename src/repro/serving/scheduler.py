@@ -1,26 +1,54 @@
-"""Continuous batching decode scheduler (vLLM-style, edge-sized).
+"""Continuous batching decode scheduler v2 (vLLM-style, edge-sized).
 
-A fixed pool of ``n_slots`` decode slots shares one batched KV cache.
-Requests are prefilled one at a time (batch-1 prefill) and their caches
-inserted into a free slot; every ``step()`` decodes ALL active slots in a
-single jit-compiled decode_step with per-slot positions (the vector-pos
-support in repro.models.attention). Finished sequences free their slot
-immediately, so new requests join mid-flight — no batch barrier.
+A fixed pool of ``n_slots`` decode slots shares one batched KV cache; every
+``step()`` decodes ALL occupied slots in a single jit-compiled decode_step
+with per-slot positions (the vector-pos support in repro.models.attention).
+Finished sequences free their slot immediately, so new requests join
+mid-flight — no batch barrier.
+
+v2 (serving as a first-class ``repro.api`` citizen):
+
+* The engine serves a ``ModelArtifact`` / ``InferenceSession`` (or legacy
+  ``(params, cfg)``) and pins a kernel ``Backend`` from the registry at
+  trace time, so an int8-Pallas engine and an fp32 engine coexist in one
+  process with independently compiled entry points.
+* Chunked prefill: only the first ``prefill_chunk`` prompt tokens run
+  through the batch-1 prefill; the remainder of the prompt rides the
+  *batched* decode step, one token per tick, interleaved with every active
+  slot's decode — a long prompt no longer stalls in-flight generation.
+  ``prefill_chunk=0`` (default) prefills whole prompts in one shot, which is
+  bit-identical to ``InferenceSession.generate``.
+* Per-request ``SamplingParams`` (greedy / temperature / top-k), seeded per
+  token index so output never depends on batch composition or slot layout.
+* Per-slot EOS, including per-codebook EOS tuples for multi-codebook models.
+* Streaming: ``submit(..., on_token=fn)`` fires per generated token.
+* Admission control: priority scheduling plus ``max_queue_depth`` with
+  rejection accounting, surfaced through the stable ``metrics()`` schema.
 
 Deterministic and thread-free, like the rest of the serving layer.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
+from repro.serving.sampling import SamplingParams, sample
+
+#: every metrics() call returns exactly these keys (schema-stable for the
+#: BENCH_*.json pipeline — see benchmarks/report.py and DESIGN.md §Serving v2)
+METRIC_KEYS = (
+    "completed", "rejected", "queued", "active", "submitted",
+    "decode_steps", "generated_tokens", "prefill_tokens",
+    "mean_ttft_s", "p50_ttft_s", "p90_ttft_s",
+    "mean_latency_s", "throughput_tok_s",
+)
 
 
 @dataclasses.dataclass
@@ -29,12 +57,26 @@ class GenRequest:
     tokens: jax.Array                  # [1, S_prompt] (or [1,S,K] audio)
     max_new_tokens: int
     frontend_embeds: Optional[jax.Array] = None
-    eos_id: int = -1                   # -1: no EOS stopping
+    eos_id: Union[int, Sequence[int]] = -1   # -1: no EOS; tuple: per-codebook
     out_tokens: Optional[List[int]] = None
     done: bool = False
     submitted_at: float = 0.0
     first_token_at: float = 0.0
     finished_at: float = 0.0
+    # v2 fields
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    priority: int = 0
+    on_token: Optional[Callable[["GenRequest", Any], None]] = None
+    status: str = "queued"             # queued|rejected|prefill|decode|done
+    n_consumed: int = 0                # prompt tokens already in the cache
+
+    @property
+    def prompt_len(self) -> int:
+        return self.tokens.shape[1]
+
+    @property
+    def rejected(self) -> bool:
+        return self.status == "rejected"
 
 
 def _tree_insert(batched, single, slot: int):
@@ -47,111 +89,260 @@ def _tree_insert(batched, single, slot: int):
         batched, single)
 
 
+def _hits_eos(token, eos_id) -> bool:
+    """token: int or [K] list; eos_id: -1 (never), int (codebook 0), or a
+    per-codebook sequence (all codebooks must match)."""
+    if isinstance(eos_id, (list, tuple)):
+        toks = token if isinstance(token, list) else [token]
+        return len(toks) == len(eos_id) and all(
+            t == e for t, e in zip(toks, eos_id))
+    if eos_id < 0:
+        return False
+    first = token[0] if isinstance(token, list) else token
+    return first == eos_id
+
+
 class ContinuousBatchingEngine:
-    def __init__(self, params, cfg: ModelConfig, n_slots: int = 4,
-                 max_len: int = 512):
+    """``model`` may be a ``repro.api.ModelArtifact``, an
+    ``InferenceSession`` (its pinned backend is inherited), or a raw params
+    pytree with ``cfg`` passed separately (legacy signature)."""
+
+    def __init__(self, model, cfg: Optional[ModelConfig] = None,
+                 n_slots: int = 4, max_len: int = 512, *,
+                 backend=None, prefill_chunk: int = 0,
+                 max_queue_depth: int = 0):
+        # local import: repro.api pulls the fleet stack which imports
+        # serving — resolve lazily to stay acyclic (same as engine.py)
+        from repro.api.backends import get_backend, use_backend
+        from repro.serving.engine import InferenceSession
+
+        if isinstance(model, InferenceSession):
+            params, cfg = model.params, model.cfg
+            backend = backend if backend is not None else model.backend
+        elif hasattr(model, "params") and hasattr(model, "config"):
+            params, cfg = model.params, model.config       # ModelArtifact
+        else:
+            if cfg is None:
+                raise TypeError(
+                    "ContinuousBatchingEngine(params, cfg) requires a "
+                    "ModelConfig when given a raw params pytree")
+            params = model
         self.params = params
         self.cfg = cfg
+        self.backend = get_backend(backend) if backend is not None else None
         self.n_slots = n_slots
         self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.max_queue_depth = max_queue_depth
         self.cache = init_cache(cfg, n_slots, max_len)
         self.positions = jnp.zeros((n_slots,), jnp.int32)
         self.active: List[Optional[GenRequest]] = [None] * n_slots
         self.last_tokens = (jnp.zeros((n_slots, 1, cfg.n_codebooks), jnp.int32)
                             if cfg.n_codebooks > 1
                             else jnp.zeros((n_slots, 1), jnp.int32))
-        self.pending: deque[GenRequest] = deque()
+        self._pending: List[Tuple[int, int, GenRequest]] = []  # heap
+        self.all_requests: List[GenRequest] = []
         self._next_rid = 0
         self.steps = 0
-        # jit entry points (shapes fixed by the slot pool)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
-        self._prefill = jax.jit(
-            lambda p, b: prefill(p, b, cfg, pad_to=max_len))
+        self.rejected_total = 0
+        self.prefill_tokens = 0        # prompt tokens processed by prefill
+        # jit entry points (shapes fixed by the slot pool), traced with this
+        # engine's backend in scope so the kernel choice is baked in
+        def bind(fn):
+            jitted = jax.jit(fn)
+
+            def call(*args):
+                with use_backend(self.backend):
+                    return jitted(*args)
+
+            return call
+
+        self._decode = bind(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+        self._prefill = bind(lambda p, b: prefill(p, b, cfg, pad_to=max_len))
+
+    # ---------------------------------------------------------------- #
+    @classmethod
+    def from_artifact(cls, artifact, backend=None,
+                      **kw) -> "ContinuousBatchingEngine":
+        return cls(artifact, backend=backend, **kw)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending) or any(r is not None for r in self.active)
+
+    def warmup(self, prompt_len: int = 0, max_new_tokens: int = 2) -> None:
+        """Trace + compile the prefill/decode entry points with a throwaway
+        request, then reset all counters, so wall-clock metrics measure
+        steady-state serving instead of jax.jit compile time (benchmarks
+        call this before replaying a trace). ``prompt_len`` defaults to the
+        prefill chunk size — the batch-1 prefill shape real chunked
+        requests hit."""
+        s = prompt_len or self.prefill_chunk or 8
+        shape = ((1, s, self.cfg.n_codebooks) if self.cfg.n_codebooks > 1
+                 else (1, s))
+        self.submit(jnp.zeros(shape, jnp.int32), max_new_tokens)
+        self.run()
+        self.all_requests.clear()
+        self.steps = 0
+        self.prefill_tokens = 0
+        self.rejected_total = 0
 
     # ---------------------------------------------------------------- #
     def submit(self, tokens, max_new_tokens: int = 16,
-               frontend_embeds=None, eos_id: int = -1) -> GenRequest:
+               frontend_embeds=None, eos_id: Union[int, Sequence[int]] = -1,
+               sampling: Optional[SamplingParams] = None, priority: int = 0,
+               on_token: Optional[Callable] = None) -> GenRequest:
+        """Queue a request. Higher ``priority`` admits first (FIFO within a
+        priority level). When the queue already holds ``max_queue_depth``
+        requests the submission is REJECTED: ``req.status == "rejected"``,
+        never scheduled, counted in ``metrics()["rejected"]``."""
         req = GenRequest(self._next_rid, tokens, max_new_tokens,
                          frontend_embeds, eos_id, out_tokens=[],
-                         submitted_at=time.perf_counter())
+                         submitted_at=time.perf_counter(),
+                         sampling=sampling or SamplingParams(),
+                         priority=priority, on_token=on_token)
         self._next_rid += 1
-        self.pending.append(req)
+        self.all_requests.append(req)
+        if self.max_queue_depth and len(self._pending) >= self.max_queue_depth:
+            req.status = "rejected"
+            self.rejected_total += 1
+            return req
+        heapq.heappush(self._pending, (-priority, req.rid, req))
         return req
 
+    # ---------------------------------------------------------------- #
     def _admit(self) -> None:
-        """Prefill pending requests into free slots."""
+        """Prefill the first chunk of pending requests into free slots."""
         for slot in range(self.n_slots):
-            if self.active[slot] is not None or not self.pending:
+            if self.active[slot] is not None or not self._pending:
                 continue
-            req = self.pending.popleft()
-            batch = {"tokens": req.tokens}
+            _, _, req = heapq.heappop(self._pending)
+            s = req.prompt_len
+            chunk = min(self.prefill_chunk, s) if self.prefill_chunk else s
+            batch = {"tokens": req.tokens[:, :chunk]}
             if req.frontend_embeds is not None:
+                # frontend embeds are prepended, so they ride the first chunk
                 batch["frontend_embeds"] = req.frontend_embeds
             last, single_cache = self._prefill(self.params, batch)
             self.cache = _tree_insert(self.cache, single_cache, slot)
-            prompt_len = req.tokens.shape[1] + self.cfg.n_frontend_tokens
-            self.positions = self.positions.at[slot].set(prompt_len)
-            nxt = jnp.argmax(last[0, -1], axis=-1).astype(jnp.int32)
-            self._record(req, nxt)
-            self.last_tokens = self.last_tokens.at[slot].set(
-                nxt.reshape(self.last_tokens.shape[1:]))
+            self.positions = self.positions.at[slot].set(
+                chunk + self.cfg.n_frontend_tokens)
+            req.n_consumed = chunk
+            self.prefill_tokens += chunk
             self.active[slot] = req
+            if chunk == s:
+                # whole prompt in cache: prefill logits give the first token
+                nxt = sample(last[0, -1], req.sampling, 0)
+                req.status = "decode"
+                self._record(req, nxt)
+                self._set_last(slot, nxt)
+            else:
+                # chunked: feed the rest of the prompt through the batched
+                # decode step, one token per tick, alongside active decodes
+                req.status = "prefill"
+                self._set_last(slot, self._prompt_token(req, chunk))
+
+    def _prompt_token(self, req: GenRequest, i: int):
+        return req.tokens[0, i]
+
+    def _set_last(self, slot: int, token) -> None:
+        self.last_tokens = self.last_tokens.at[slot].set(
+            jnp.asarray(token, jnp.int32).reshape(self.last_tokens.shape[1:]))
 
     def _record(self, req: GenRequest, token) -> None:
         tok = token.tolist() if hasattr(token, "tolist") else token
         if not req.out_tokens:
             req.first_token_at = time.perf_counter()
         req.out_tokens.append(tok)
-        first = tok[0] if isinstance(tok, list) else tok
-        if len(req.out_tokens) >= req.max_new_tokens or first == req.eos_id:
+        if req.on_token is not None:
+            req.on_token(req, tok)
+        if len(req.out_tokens) >= req.max_new_tokens or _hits_eos(tok, req.eos_id):
             req.done = True
+            req.status = "done"
             req.finished_at = time.perf_counter()
 
     # ---------------------------------------------------------------- #
     def step(self) -> int:
-        """Admit -> one batched decode step -> harvest. Returns #active."""
+        """Admit -> one batched decode step -> harvest. Returns #occupied."""
         self._admit()
-        if not any(self.active):
+        if not any(r is not None for r in self.active):
             return 0
         logits, self.cache = self._decode(self.params, self.cache,
                                           self.last_tokens, self.positions)
         self.positions = self.positions + 1
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # [B(,K)]
+        last = logits[:, -1]                     # [B, V] or [B, K, V]
+        # one batched argmax serves every greedy slot (the common case);
+        # only non-greedy requests pay a per-slot sampling dispatch
+        greedy = (jnp.argmax(last, axis=-1).astype(jnp.int32)
+                  if any(r is not None and r.sampling.is_greedy
+                         for r in self.active) else None)
         self.steps += 1
-        n_active = 0
+        n_occupied = 0
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            self._record(req, nxt[slot])
-            self.last_tokens = self.last_tokens.at[slot].set(
-                nxt[slot].reshape(self.last_tokens.shape[1:]))
+            if req.n_consumed < req.prompt_len:
+                # this tick consumed one prompt token (chunked prefill tail)
+                req.n_consumed += 1
+                if req.n_consumed < req.prompt_len:
+                    self._set_last(slot, self._prompt_token(req, req.n_consumed))
+                    n_occupied += 1
+                    continue
+                req.status = "decode"   # logits now predict the first token
+            nxt = (greedy[slot] if req.sampling.is_greedy
+                   else sample(last[slot], req.sampling, len(req.out_tokens)))
+            self._record(req, nxt)
+            self._set_last(slot, nxt)
             if req.done:
-                self.active[slot] = None     # slot frees mid-flight
+                self.active[slot] = None         # slot frees mid-flight
+                self.positions = self.positions.at[slot].set(0)
             else:
-                n_active += 1
-        return n_active
+                n_occupied += 1
+        return n_occupied
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.pending and not any(self.active):
+            if not self.has_work:
                 break
             self.step()
 
     # ---------------------------------------------------------------- #
-    def metrics(self, reqs: List[GenRequest]) -> Dict[str, float]:
+    def metrics(self, reqs: Optional[List[GenRequest]] = None
+                ) -> Dict[str, float]:
+        """Aggregate serving metrics over ``reqs`` (default: every request
+        ever submitted). Always returns the full ``METRIC_KEYS`` set —
+        zeroed where nothing finished — so JSON reports built on top have a
+        stable schema."""
+        if reqs is None:
+            reqs = self.all_requests
         done = [r for r in reqs if r.done]
+        m = dict.fromkeys(METRIC_KEYS, 0.0)
+        m.update(
+            completed=len(done),
+            rejected=sum(1 for r in reqs if r.rejected),
+            queued=self.queue_depth,
+            active=sum(1 for r in self.active if r is not None),
+            submitted=len(reqs),
+            decode_steps=self.steps,
+            generated_tokens=sum(len(r.out_tokens or []) for r in reqs),
+            prefill_tokens=self.prefill_tokens,
+        )
         if not done:
-            return {"completed": 0}
-        ttft = [r.first_token_at - r.submitted_at for r in done]
+            return m
+        ttft = sorted(r.first_token_at - r.submitted_at for r in done)
         total = [r.finished_at - r.submitted_at for r in done]
         toks = sum(len(r.out_tokens) for r in done)
         wall = max(r.finished_at for r in done) - min(r.submitted_at
                                                       for r in done)
-        return {
-            "completed": len(done),
-            "decode_steps": self.steps,
-            "mean_ttft_s": sum(ttft) / len(ttft),
-            "mean_latency_s": sum(total) / len(total),
-            "throughput_tok_s": toks / max(wall, 1e-9),
-        }
+        m.update(
+            mean_ttft_s=sum(ttft) / len(ttft),
+            p50_ttft_s=ttft[len(ttft) // 2],
+            p90_ttft_s=ttft[min(9 * len(ttft) // 10, len(ttft) - 1)],
+            mean_latency_s=sum(total) / len(total),
+            throughput_tok_s=toks / max(wall, 1e-9),
+        )
+        return m

@@ -1,0 +1,76 @@
+"""BENCH_*.json writer + regression gate: schema stability and the >20%
+throughput/TTFT gating rules CI relies on."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.report import SCHEMA_VERSION, make_report, write_report
+
+
+def _load_compare_bench():
+    spec = importlib.util.spec_from_file_location(
+        "compare_bench", ROOT / "scripts" / "compare_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_write_report_schema(tmp_path):
+    results = {"variants": {"fp32": {"throughput_tok_s": 10.0,
+                                     "mean_ttft_s": 0.5}}}
+    path = write_report(tmp_path, "serving", results, {"n_slots": 4})
+    assert path.name == "BENCH_serving.json"
+    loaded = json.loads(path.read_text())
+    assert loaded["schema_version"] == SCHEMA_VERSION
+    assert loaded["bench"] == "serving"
+    assert {"jax", "python", "platform"} <= set(loaded["env"])
+    assert loaded["config"] == {"n_slots": 4}
+    assert loaded["results"] == results
+    # stable serialization: sorted keys, so identical payloads diff clean
+    assert path.read_text() == json.dumps(loaded, indent=2,
+                                          sort_keys=True) + "\n"
+
+
+def test_flatten_numeric_paths():
+    cb = _load_compare_bench()
+    flat = cb.flatten({"a": {"b": 1, "c": {"d": 2.5}}, "s": "str", "t": True})
+    assert flat == {"a.b": 1.0, "a.c.d": 2.5}
+
+
+@pytest.mark.parametrize("metric,old,new,fails", [
+    ("throughput_tok_s", 10.0, 7.9, True),    # -21% throughput: gate
+    ("throughput_tok_s", 10.0, 8.5, False),   # -15%: within threshold
+    ("throughput_tok_s", 10.0, 20.0, False),  # improvement never fails
+    ("mean_ttft_s", 1.0, 1.25, True),         # +25% TTFT: gate
+    ("mean_ttft_s", 1.0, 1.1, False),
+    ("mean_ttft_s", 1.0, 0.5, False),
+])
+def test_compare_gating(metric, old, new, fails):
+    cb = _load_compare_bench()
+    base = make_report("serving", {"variants": {"v": {metric: old}}})
+    cand = make_report("serving", {"variants": {"v": {metric: new}}})
+    regressions, _, _, n_gated = cb.compare(base, cand, threshold=0.20)
+    assert n_gated == 1
+    assert bool(regressions) == fails
+
+
+def test_compare_fails_loudly_when_nothing_pairs():
+    """Schema drift (renamed variant, empty results) must not silently pass
+    the gate: zero gated pairs is itself a failure."""
+    cb = _load_compare_bench()
+    base = make_report("serving",
+                       {"variants": {"old_name": {"throughput_tok_s": 10.0}}})
+    cand = make_report("serving",
+                       {"variants": {"new_name": {"throughput_tok_s": 10.0}}})
+    regressions, improvements, infos, n_gated = cb.compare(base, cand, 0.2)
+    assert n_gated == 0 and not regressions
+    # ungated metrics never pair either
+    base = make_report("serving", {"variants": {"v": {"decode_steps": 10}}})
+    cand = make_report("serving", {"variants": {"v": {"decode_steps": 99}}})
+    assert cb.compare(base, cand, 0.2) == ([], [], [], 0)

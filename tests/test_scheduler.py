@@ -1,13 +1,17 @@
-"""Continuous-batching scheduler: outputs must equal sequential greedy
-generation, slots must be reused mid-flight."""
+"""Continuous-batching scheduler v2: outputs must equal sequential greedy
+generation (per backend), chunked prefill must not change tokens, sampling
+must be seeded-deterministic, and admission control must be observable
+through the stable metrics schema."""
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro import configs as C
+from repro.api import ModelArtifact, VariantSpec
 from repro.models import init_params
-from repro.serving import InferenceSession
-from repro.serving.scheduler import ContinuousBatchingEngine
+from repro.serving import InferenceSession, SamplingParams
+from repro.serving.scheduler import (METRIC_KEYS, ContinuousBatchingEngine,
+                                     _hits_eos)
 
 
 @pytest.fixture(scope="module")
@@ -17,12 +21,23 @@ def setup():
     return cfg, params
 
 
+@pytest.fixture(scope="module")
+def int8_setup(setup):
+    cfg, params = setup
+    qparams, _ = VariantSpec.dynamic_int8().build(params, cfg)
+    return cfg, qparams
+
+
+def _prompts(cfg, n=5, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.randint(jax.random.fold_in(key, i), (1, 5 + i),
+                               0, cfg.vocab_size) for i in range(n)]
+
+
 def test_matches_sequential_generate(setup):
     cfg, params = setup
     session = InferenceSession(params, cfg)
-    key = jax.random.PRNGKey(1)
-    prompts = [jax.random.randint(jax.random.fold_in(key, i), (1, 5 + i),
-                                  0, cfg.vocab_size) for i in range(5)]
+    prompts = _prompts(cfg)
     expected = [session.generate({"tokens": p}, n_new=6)[0].tolist()
                 for p in prompts]
 
@@ -32,6 +47,163 @@ def test_matches_sequential_generate(setup):
     assert all(r.done for r in reqs)
     for r, exp in zip(reqs, expected):
         assert r.out_tokens == exp, (r.rid, r.out_tokens, exp)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+def test_determinism_vs_sequential_per_backend(int8_setup, backend):
+    """Mid-flight admission + slot reuse (5 requests on 2 slots) must be
+    token-identical to sequential generate, with engine and session pinned
+    to the same kernel backend — on the int8 artifact, so the quantized
+    primitives really dispatch through the pinned backend."""
+    cfg, qparams = int8_setup
+    artifact = ModelArtifact.create("m", "v1", qparams, cfg,
+                                    ).with_variant("int8_dynamic", qparams)
+    session = artifact.session(backend=backend)
+    prompts = _prompts(cfg, n=5)
+    expected = [session.generate({"tokens": p}, n_new=4)[0].tolist()
+                for p in prompts]
+
+    engine = ContinuousBatchingEngine(artifact, n_slots=2, max_len=64,
+                                      backend=backend)
+    assert engine.backend.name == backend
+    reqs = [engine.submit(p, max_new_tokens=4) for p in prompts]
+    engine.run()
+    assert all(r.done for r in reqs)
+    for r, exp in zip(reqs, expected):
+        assert r.out_tokens == exp, (backend, r.rid, r.out_tokens, exp)
+
+
+def test_chunked_prefill_matches_whole_prompt(setup):
+    """prefill_chunk must change scheduling, not tokens: the tail of the
+    prompt rides the batched decode step, so prefill work shrinks while
+    outputs stay identical."""
+    cfg, params = setup
+    prompts = _prompts(cfg, n=4)
+
+    def run_engine(chunk):
+        eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=64,
+                                       prefill_chunk=chunk)
+        reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        eng.run()
+        return eng, [r.out_tokens for r in reqs]
+
+    whole, base_tokens = run_engine(0)
+    chunked, chunk_tokens = run_engine(3)
+    assert chunk_tokens == base_tokens
+    # only the first 3 tokens of each prompt went through batch-1 prefill
+    assert chunked.prefill_tokens == 3 * len(prompts)
+    assert chunked.prefill_tokens < whole.prefill_tokens
+
+
+def test_engine_from_session_inherits_backend(setup):
+    cfg, params = setup
+    session = InferenceSession(params, cfg, backend="ref")
+    engine = ContinuousBatchingEngine(session, n_slots=2, max_len=64)
+    assert engine.backend.name == "ref"
+    r = engine.submit(_prompts(cfg, n=1)[0], max_new_tokens=3)
+    engine.run()
+    assert r.done and len(r.out_tokens) == 3
+
+
+def test_sampling_seeded_deterministic(setup):
+    cfg, params = setup
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=3, max_len=64)
+    prompt = _prompts(cfg, n=1)[0]
+    sp = SamplingParams(temperature=0.8, top_k=10, seed=42)
+    r1 = engine.submit(prompt, max_new_tokens=5, sampling=sp)
+    r2 = engine.submit(prompt, max_new_tokens=5, sampling=sp)
+    rg = engine.submit(prompt, max_new_tokens=5)
+    engine.run()
+    # same seed -> same stream, regardless of slot; greedy differs
+    assert r1.out_tokens == r2.out_tokens
+    assert r1.out_tokens != rg.out_tokens
+    # greedy is exact argmax — matches sequential generate
+    session = InferenceSession(params, cfg)
+    assert rg.out_tokens == session.generate({"tokens": prompt},
+                                             n_new=5)[0].tolist()
+
+
+def test_priority_admission_order(setup):
+    cfg, params = setup
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=1, max_len=64)
+    prompt = _prompts(cfg, n=1)[0]
+    low = engine.submit(prompt, max_new_tokens=3, priority=0)
+    mid = engine.submit(prompt, max_new_tokens=3, priority=1)
+    high = engine.submit(prompt, max_new_tokens=3, priority=2)
+    engine.run()
+    assert high.finished_at < mid.finished_at < low.finished_at
+
+
+def test_queue_depth_rejection_stats(setup):
+    cfg, params = setup
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=1, max_len=64,
+                                      max_queue_depth=2)
+    prompt = _prompts(cfg, n=1)[0]
+    reqs = [engine.submit(prompt, max_new_tokens=2) for _ in range(4)]
+    assert [r.status for r in reqs] == ["queued", "queued",
+                                       "rejected", "rejected"]
+    engine.run()
+    m = engine.metrics()
+    assert m["completed"] == 2 and m["rejected"] == 2 and m["submitted"] == 4
+    assert not reqs[2].done and reqs[2].out_tokens == []
+
+
+def test_warmup_compiles_then_resets_counters(setup):
+    cfg, params = setup
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=64,
+                                      prefill_chunk=4)
+    engine.warmup()
+    m = engine.metrics()
+    assert all(v == 0 for v in m.values())     # throwaway run not counted
+    r = engine.submit(_prompts(cfg, n=1)[0], max_new_tokens=3)
+    engine.run()
+    assert r.done and engine.metrics()["completed"] == 1
+
+
+def test_metrics_schema_stable_when_empty(setup):
+    cfg, params = setup
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=64)
+    m = engine.metrics()
+    assert set(m) == set(METRIC_KEYS)
+    assert all(v == 0 for v in m.values())
+    # still the full key set after work completes
+    engine.submit(_prompts(cfg, n=1)[0], max_new_tokens=2)
+    engine.run()
+    m = engine.metrics()
+    assert set(m) == set(METRIC_KEYS)
+    assert m["completed"] == 1 and m["throughput_tok_s"] > 0
+
+
+def test_streaming_token_callback(setup):
+    cfg, params = setup
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=64)
+    streamed = []
+    r = engine.submit(_prompts(cfg, n=1)[0], max_new_tokens=4,
+                      on_token=lambda req, tok: streamed.append((req.rid, tok)))
+    engine.run()
+    assert [t for _, t in streamed] == r.out_tokens
+    assert all(rid == r.rid for rid, _ in streamed)
+
+
+def test_eos_stops_generation(setup):
+    cfg, params = setup
+    prompt = _prompts(cfg, n=1)[0]
+    probe = ContinuousBatchingEngine(params, cfg, n_slots=1, max_len=64)
+    full = probe.submit(prompt, max_new_tokens=4)
+    probe.run()
+    engine = ContinuousBatchingEngine(params, cfg, n_slots=1, max_len=64)
+    r = engine.submit(prompt, max_new_tokens=4, eos_id=full.out_tokens[1])
+    engine.run()
+    assert r.done and r.out_tokens == full.out_tokens[:2]
+
+
+def test_hits_eos_multi_codebook():
+    assert not _hits_eos(5, -1)
+    assert _hits_eos(5, 5) and not _hits_eos(4, 5)
+    assert _hits_eos([5, 1], 5)            # int eos: codebook 0 decides
+    assert _hits_eos([5, 1], (5, 1))       # per-codebook: all must match
+    assert not _hits_eos([5, 2], (5, 1))
+    assert not _hits_eos([5], (5, 1))
 
 
 def test_slots_reused_mid_flight(setup):
