@@ -1,0 +1,147 @@
+"""Fleet control-plane benchmark (Fleet v2): staged-rollout convergence,
+fleet-scale per-variant inspection latency, and rollback MTTR, measured on
+the deterministic event-driven ``FleetSimulator``.
+
+The numbers are *virtual-time* and fully seeded, so they are reproducible
+across machines and CI runs — a regression here means the rollout state
+machine, fault handling, or workload model changed behaviour, not that the
+runner was noisy. Returns CSV lines for stdout plus a structured payload
+for ``BENCH_fleet.json`` (benchmarks/report.py schema); gated metrics:
+``rollout_convergence_s`` and ``fleet_p99_latency_ms`` (lower is better,
+scripts/compare_bench.py).
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--fast]
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Any, Dict, List, Tuple
+
+import jax
+
+from repro import configs as C
+from repro.api import (ArtifactRegistry, Deployment, FaultPlan, HealthGate,
+                       ModelArtifact, RolloutPolicy, VariantSpec,
+                       WorkloadModel)
+from repro.models import init_params
+
+ARCH = "stablelm-1.6b"
+SEED = 17
+SPECS = [VariantSpec.fp32(), VariantSpec.dynamic_int8(),
+         VariantSpec.static_int8(calib_batches=1)]
+# accuracy gate sized for the 2% base error rate: a bad release (50% error)
+# trips it by a mile, small-sample noise does not
+POLICY = RolloutPolicy(waves=(0.05, 0.25, 1.0), soak_s=20.0,
+                       install_stagger_s=0.1, gate_min_calls=40,
+                       gate=HealthGate(max_accuracy_drop=0.08,
+                                       max_latency_ratio=1.6))
+FAULTS = FaultPlan(offline_rate_per_hour=1.0, mean_offline_s=60.0,
+                   install_fail_rate=0.03, slow_link_rate=0.1,
+                   flaky_probe_rate=0.05)
+
+
+def _calib_batch(cfg):
+    key = jax.random.PRNGKey(123)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+    return batch
+
+
+def _publish(registry: ArtifactRegistry, cfg, params) -> None:
+    dep = Deployment(registry, model="vqi")
+    calib = [_calib_batch(cfg)]
+    for version in ("v1", "v2"):
+        dep.publish(ModelArtifact.create("vqi", version, params, cfg),
+                    SPECS, calib_data=calib)
+
+
+def _simulate(registry: ArtifactRegistry, n_devices: int,
+              bad_version: bool) -> Tuple[Any, Any]:
+    """One seeded scenario: converge v1, then roll v2 (optionally a
+    regressed release that must gate-fail and roll back)."""
+    dep = Deployment(registry, model="vqi")
+    workload = WorkloadModel(
+        version_error_rate={"v2": 0.5} if bad_version else {})
+    sim = dep.simulator(seed=SEED, faults=FAULTS, workload=workload)
+    sim.add_heterogeneous_fleet(n_devices, inspection_interval_s=5.0)
+    sim.schedule_rollout("v1", POLICY, at=10.0)
+    sim.schedule_rollout("v2", POLICY, at=500.0)
+    sim.run(until=1000.0)
+    return sim, sim.rollouts[1]
+
+
+def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
+    cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_devices = 150 if fast else 400
+    lines: List[str] = []
+    with tempfile.TemporaryDirectory() as root:
+        registry = ArtifactRegistry(root)
+        _publish(registry, cfg, params)
+
+        sim, upgrade = _simulate(registry, n_devices, bad_version=False)
+        assert upgrade.status == "complete", upgrade.summary()
+        conv_s = upgrade.convergence_s or 0.0
+        lines.append(f"fleet_rollout_convergence,{conv_s * 1e6:.0f},"
+                     f"devices={n_devices} waves={len(upgrade.waves)} "
+                     f"installs={upgrade.installs}")
+        variants: Dict[str, Any] = {}
+        for variant, m in sim.variant_metrics("v2").items():
+            variants[variant] = {
+                "calls": m["calls"],
+                "fleet_p50_latency_ms": m["p50_latency_ms"],
+                "fleet_p99_latency_ms": m["p99_latency_ms"],
+                "mean_latency_ms": m["mean_latency_ms"],
+                "error_rate": m["error_rate"],
+            }
+            lines.append(
+                f"fleet_latency_{variant},{m['mean_latency_ms'] * 1e3:.0f},"
+                f"p50={m['p50_latency_ms']:.1f}ms "
+                f"p99={m['p99_latency_ms']:.1f}ms calls={m['calls']}")
+
+        bad_sim, bad = _simulate(registry, n_devices, bad_version=True)
+        assert bad.status == "aborted", bad.summary()
+        mttr_s = bad.mttr_s or 0.0
+        lines.append(f"fleet_rollback_mttr,{mttr_s * 1e6:.0f},"
+                     f"rolled_back={len(bad.rolled_back)} "
+                     f"reason=gate_failed")
+
+        payload = {
+            "arch": ARCH,
+            "seed": SEED,
+            "devices": n_devices,
+            "policy_waves": list(POLICY.waves),
+            "variants": variants,
+            "rollout": {
+                "rollout_convergence_s": conv_s,
+                "rollback_mttr_s": mttr_s,
+                "installs": upgrade.installs,
+                "retries": upgrade.retries,
+                "failed_devices": len(upgrade.failed),
+                "events": len(sim.events),
+                "inspections": sim.inspections,
+            },
+        }
+    return lines, payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", metavar="OUT_DIR", default=None)
+    args = ap.parse_args()
+    out_lines, out_payload = run(fast=args.fast)
+    print("name,us_per_call,derived")
+    for line in out_lines:
+        print(line)
+    if args.json:
+        from benchmarks.report import write_report
+
+        config = {k: v for k, v in out_payload.items()
+                  if k not in ("variants", "rollout")}
+        config["fast"] = args.fast
+        path = write_report(args.json, "fleet",
+                            {"variants": out_payload["variants"],
+                             "rollout": out_payload["rollout"]}, config)
+        print(f"# wrote {path}")

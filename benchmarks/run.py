@@ -13,6 +13,8 @@ machine-readable ``BENCH_quant.json`` / ``BENCH_serving.json`` reports
   quant_accuracy_* paper text: small accuracy degradation
   lifecycle_*      paper §4 lifecycle operations
   serving_cb_*     continuous-batching v2 engine under seeded open-loop load
+  fleet_*          Fleet v2 event-driven simulator: rollout convergence,
+                   per-variant fleet latency, rollback MTTR (virtual-time)
   roofline_*       deliverable (g): per (arch x shape x mesh) dry-run terms
 """
 import argparse
@@ -47,13 +49,23 @@ def main() -> None:
     for line in serving_lines:
         print(line)
     sys.stdout.flush()
+    from benchmarks import fleet_bench
+
+    fleet_lines, fleet_payload = fleet_bench.run(fast=args.fast)
+    for line in fleet_lines:
+        print(line)
+    sys.stdout.flush()
     if args.json:
         for bench, payload in (("quant", quant_payload),
-                               ("serving", serving_payload)):
-            config = {k: v for k, v in payload.items() if k != "variants"}
+                               ("serving", serving_payload),
+                               ("fleet", fleet_payload)):
+            results = {"variants": payload["variants"]}
+            if "rollout" in payload:
+                results["rollout"] = payload["rollout"]
+            config = {k: v for k, v in payload.items()
+                      if k not in ("variants", "rollout")}
             config["fast"] = args.fast
-            path = write_report(args.json, bench,
-                                {"variants": payload["variants"]}, config)
+            path = write_report(args.json, bench, results, config)
             print(f"# wrote {path}", file=sys.stderr)
     if not args.skip_roofline:
         from benchmarks import roofline

@@ -8,8 +8,10 @@ Walks both reports (benchmarks/report.py schema), pairs every numeric metric
 that exists at the same path in both, and fails (exit 1) when a *gated*
 metric regresses by more than ``--threshold`` (default 20%):
 
-    throughput_tok_s   lower is worse
-    mean_ttft_s        higher is worse
+    throughput_tok_s        lower is worse   (serving)
+    mean_ttft_s             higher is worse  (serving)
+    rollout_convergence_s   higher is worse  (fleet)
+    fleet_p99_latency_ms    higher is worse  (fleet)
 
 All other shared metrics are printed as informational deltas. Deliberately
 dependency-free and repo-import-free so CI can run it against a downloaded
@@ -23,7 +25,8 @@ import sys
 from typing import Dict
 
 #: metric leaf name -> direction ("higher"/"lower" = which way is better)
-GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower"}
+GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower",
+         "rollout_convergence_s": "lower", "fleet_p99_latency_ms": "lower"}
 
 
 def flatten(node, prefix: str = "") -> Dict[str, float]:
@@ -81,7 +84,7 @@ def main() -> int:
     regressions, improvements, infos, n_gated = compare(baseline, candidate,
                                                         args.threshold)
     if n_gated == 0:
-        print("ERROR: no gated metric (throughput_tok_s / mean_ttft_s) "
+        print(f"ERROR: no gated metric ({' / '.join(sorted(GATED))}) "
               "exists at a shared path in both reports — nothing was "
               "compared. Schema drift or an empty benchmark run.")
         return 2

@@ -16,12 +16,15 @@ from repro.api.backends import (Backend, PallasBackend, RefBackend,
                                 use_backend)
 from repro.api.variants import DEFAULT_VARIANTS, QuantRecipe, VariantSpec
 from repro.api.artifact import ModelArtifact
+from repro.api.registry import ArtifactRef, ArtifactRegistry
 from repro.api.deployment import Deployment
 
 # re-exported so one import serves the common lifecycle scripts
+from repro.clock import SystemClock, VirtualClock, use_clock
 from repro.fleet.agent import DeviceProfile, EdgeAgent, InstallError
-from repro.fleet.orchestrator import HealthGate, RolloutReport
-from repro.fleet.registry import ArtifactRef, ArtifactRegistry
+from repro.fleet.orchestrator import HealthGate, RolloutPolicy, RolloutReport
+from repro.fleet.simulator import (DeviceSpec, EnginePool, FaultPlan,
+                                   FleetSimulator, WorkloadModel)
 from repro.fleet.telemetry import InferenceRecord, TelemetryHub
 from repro.serving.engine import InferenceSession
 from repro.serving.loadgen import ArrivalTrace, TracedRequest, replay
@@ -35,11 +38,15 @@ __all__ = [
     "Backend", "RefBackend", "PallasBackend", "register_backend",
     "get_backend", "available_backends", "use_backend", "current_backend",
     "default_backend", "set_default_backend",
+    # clocks (shared virtual-time layer)
+    "SystemClock", "VirtualClock", "use_clock",
     # serving v2 (backend-pinned continuous batching + load generation)
     "ContinuousBatchingEngine", "GenRequest", "SamplingParams",
     "ArrivalTrace", "TracedRequest", "replay",
-    # fleet control plane
+    # fleet control plane v2
     "Deployment", "ArtifactRegistry", "ArtifactRef", "EdgeAgent",
-    "DeviceProfile", "InstallError", "HealthGate", "RolloutReport",
-    "TelemetryHub", "InferenceRecord", "InferenceSession",
+    "DeviceProfile", "InstallError", "HealthGate", "RolloutPolicy",
+    "RolloutReport", "TelemetryHub", "InferenceRecord", "InferenceSession",
+    "FleetSimulator", "DeviceSpec", "FaultPlan", "WorkloadModel",
+    "EnginePool",
 ]

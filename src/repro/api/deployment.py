@@ -14,11 +14,11 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.api.artifact import ModelArtifact
+from repro.api.registry import ArtifactRegistry
 from repro.api.variants import DEFAULT_VARIANTS, VariantSpec
 from repro.fleet.agent import DeviceProfile, EdgeAgent
 from repro.fleet.orchestrator import (FleetOrchestrator, HealthGate,
-                                      RolloutReport)
-from repro.fleet.registry import ArtifactRegistry
+                                      RolloutPolicy, RolloutReport)
 from repro.fleet.telemetry import TelemetryHub
 
 
@@ -50,12 +50,30 @@ class Deployment:
     def history(self) -> List[RolloutReport]:
         return self.fleet.history
 
+    @property
+    def audit(self) -> List[Dict[str, Any]]:
+        return self.fleet.audit
+
     def add_device(self, device_id: str,
                    profile: DeviceProfile = DeviceProfile(),
-                   backend=None) -> EdgeAgent:
-        agent = EdgeAgent(device_id, self.registry, profile, backend=backend)
+                   backend=None, clock=None) -> EdgeAgent:
+        agent = EdgeAgent(device_id, self.registry, profile, backend=backend,
+                          clock=clock)
         self.fleet.register_device(agent)
         return agent
+
+    def register_agent(self, agent: EdgeAgent) -> EdgeAgent:
+        """Register an externally constructed agent (e.g. the simulator's
+        pool-backed ``SimAgent``)."""
+        self.fleet.register_device(agent)
+        return agent
+
+    def simulator(self, **kwargs):
+        """An event-driven ``FleetSimulator`` over this deployment (Fleet
+        v2): virtual clock, failure injection, 1000+ devices."""
+        from repro.fleet.simulator import FleetSimulator
+
+        return FleetSimulator(self, **kwargs)
 
     # ------------------------------------------------------------------ #
     def publish(self, model: ModelArtifact,
@@ -76,13 +94,27 @@ class Deployment:
                 canary_fraction: float = 0.25,
                 gate: HealthGate = HealthGate()) -> RolloutReport:
         """Canary-roll ``version`` (default: latest) across the fleet."""
-        if version is None:
-            versions = self.registry.versions(self.model)
-            if not versions:
-                raise KeyError(f"no published versions for {self.model!r}")
-            version = versions[-1]
-        return self.fleet.rollout(self.model, version, validate,
-                                  canary_fraction=canary_fraction, gate=gate)
+        return self.fleet.rollout(self.model, self._resolve_version(version),
+                                  validate, canary_fraction=canary_fraction,
+                                  gate=gate)
+
+    def staged_rollout(self, version: Optional[str] = None, *,
+                       validate: Callable[[EdgeAgent], Dict[str, float]],
+                       policy: RolloutPolicy = RolloutPolicy()
+                       ) -> RolloutReport:
+        """Staged rollout (canary -> waves -> fleet-wide) of ``version``
+        (default: latest) with per-wave health gates and auto-rollback."""
+        return self.fleet.staged_rollout(self.model,
+                                         self._resolve_version(version),
+                                         validate, policy)
+
+    def _resolve_version(self, version: Optional[str]) -> str:
+        if version is not None:
+            return version
+        versions = self.registry.versions(self.model)
+        if not versions:
+            raise KeyError(f"no published versions for {self.model!r}")
+        return versions[-1]
 
     def rollback(self, devices: Optional[Sequence[str]] = None) -> List[str]:
         return self.fleet.fleet_rollback(devices)

@@ -1,4 +1,11 @@
+# Import order matters: agent/orchestrator/telemetry are api-import-free,
+# while the registry shim pulls in repro.api (which imports them back) —
+# keep the shim after the modules repro.api.deployment needs.
 from repro.fleet.agent import DeviceProfile, EdgeAgent, InstallError
-from repro.fleet.orchestrator import FleetOrchestrator, HealthGate, RolloutReport
+from repro.fleet.orchestrator import (FleetOrchestrator, HealthGate,
+                                      RolloutPolicy, RolloutReport)
+from repro.fleet.telemetry import InferenceRecord, LatencyHistogram, TelemetryHub
+from repro.fleet.simulator import (DEVICE_CLASSES, DeviceSpec, EnginePool,
+                                   FaultPlan, FleetSimulator, SimAgent,
+                                   WorkloadModel, profile_variant_policy)
 from repro.fleet.registry import ArtifactRef, ArtifactRegistry
-from repro.fleet.telemetry import InferenceRecord, TelemetryHub

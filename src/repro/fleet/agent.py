@@ -1,4 +1,4 @@
-"""Edge device agent — the thin-edge.io analog (DESIGN §2).
+"""Edge device agent — the thin-edge.io analog (DESIGN §2, §Fleet v2).
 
 An EdgeAgent manages the artifact lifecycle on one device: install from the
 registry (with device-profile admission checks), activate (build an
@@ -7,17 +7,21 @@ health metrics, and emit telemetry for the cloud feedback loop.
 
 Heterogeneous fleets (paper §1 "adapting models for heterogeneous devices")
 are modelled by DeviceProfile: small devices only admit int8 variants.
+
+Fleet v2: agents are clock-injected (event timestamps come from
+``repro.clock`` — a ``VirtualClock`` under simulation, wall time otherwise)
+and the fetch/session steps are overridable hooks, so the thousand-device
+simulator can route every device through a shared pool of backend-pinned
+engines instead of loading weights per device.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional
 
 import jax
 
-from repro.fleet.registry import ArtifactRef, ArtifactRegistry
-from repro.serving.engine import InferenceSession
+from repro import clock as _clock
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,7 +30,7 @@ class DeviceProfile:
     memory_bytes: int = 4 * 1024**3          # Pi-4-class default
     allowed_variants: tuple = ("fp32", "static_int8", "dynamic_int8")
 
-    def admits(self, ref: ArtifactRef) -> Optional[str]:
+    def admits(self, ref) -> Optional[str]:
         """Returns a rejection reason or None if the artifact is admissible."""
         if ref.variant not in self.allowed_variants:
             return f"variant {ref.variant} not allowed on {self.name}"
@@ -41,45 +45,64 @@ class InstallError(RuntimeError):
 
 
 class EdgeAgent:
-    def __init__(self, device_id: str, registry: ArtifactRegistry,
-                 profile: DeviceProfile = DeviceProfile(), backend=None):
+    def __init__(self, device_id: str, registry,
+                 profile: DeviceProfile = DeviceProfile(), backend=None,
+                 clock=None):
         self.device_id = device_id
-        self.registry = registry
+        self.registry = registry                 # repro.api.registry
         self.profile = profile
         self.backend = backend          # kernel backend name for this device
-        self.installed: List[ArtifactRef] = []     # newest last
-        self.active: Optional[ArtifactRef] = None
+        self.clock = clock              # None -> repro.clock active clock
+        self.installed: List[Any] = []           # ArtifactRefs, newest last
+        self.active: Optional[Any] = None        # active ArtifactRef
         self.artifact = None            # active ModelArtifact
-        self.session: Optional[InferenceSession] = None
+        self.session = None             # active InferenceSession
         self.events: List[Dict[str, Any]] = []
         self.error_count = 0
 
     # ---------------------------------------------------------------- #
+    def _now(self) -> float:
+        return self.clock.now() if self.clock is not None else _clock.now()
+
     def _log(self, kind: str, **kw) -> None:
-        self.events.append({"t": time.time(), "kind": kind,
+        self.events.append({"t": self._now(), "kind": kind,
                             "device": self.device_id, **kw})
 
-    def install(self, ref: ArtifactRef) -> None:
+    # Overridable lifecycle hooks (the simulator's SimAgent routes these
+    # through a shared EnginePool so 1000 devices share a handful of
+    # backend-pinned engines).
+    def _fetch_verify(self, ref) -> None:
+        """Download + sha256-verify the artifact bytes."""
+        self.registry.fetch(ref)
+
+    def _fetch_artifact(self, ref):
+        return self.registry.fetch_artifact(ref)
+
+    def _build_session(self, artifact):
+        return artifact.session(backend=self.backend)
+
+    # ---------------------------------------------------------------- #
+    def install(self, ref) -> None:
         """Download + verify + stage (does not activate)."""
         reason = self.profile.admits(ref)
         if reason:
             self._log("install_rejected", artifact=ref.key, reason=reason)
             raise InstallError(reason)
         # fetch verifies sha256 integrity
-        self.registry.fetch(ref)
+        self._fetch_verify(ref)
         self.installed.append(ref)
         self._log("installed", artifact=ref.key)
 
-    def activate(self, ref: ArtifactRef) -> None:
+    def activate(self, ref) -> None:
         if ref not in self.installed:
             self.install(ref)
-        artifact = self.registry.fetch_artifact(ref)
-        self.session = artifact.session(backend=self.backend)
+        artifact = self._fetch_artifact(ref)
+        self.session = self._build_session(artifact)
         self.artifact = artifact
         self.active = ref
         self._log("activated", artifact=ref.key)
 
-    def rollback(self) -> ArtifactRef:
+    def rollback(self):
         """Re-activate the most recent previously-installed version."""
         candidates = [r for r in self.installed
                       if self.active is None or r.version != self.active.version]
@@ -104,6 +127,9 @@ class EdgeAgent:
     def health(self) -> Dict[str, Any]:
         s = self.session.stats if self.session else None
         return {
+            # simulator agents serve through a shared EnginePool session, so
+            # their latency stats aggregate across the fleet — see SimAgent
+            "stats_scope": "device",
             "device": self.device_id,
             "profile": self.profile.name,
             "active": self.active.key if self.active else None,

@@ -17,9 +17,9 @@ from repro.api.artifact import ModelArtifact
 from repro.api.variants import VariantSpec
 from repro.data.pipeline import (ASSET_TYPES, CONDITIONS, VQITask, vqi_batch,
                                  vqi_eval_accuracy, vqi_stream)
+from repro.api.registry import ArtifactRegistry
 from repro.fleet.agent import DeviceProfile, EdgeAgent
 from repro.fleet.orchestrator import FleetOrchestrator, HealthGate
-from repro.fleet.registry import ArtifactRegistry
 from repro.fleet.telemetry import InferenceRecord, TelemetryHub
 from repro.models import forward
 from repro.models.config import ModelConfig

@@ -7,10 +7,12 @@ offered load. Arrivals are open-loop — requests arrive on the virtual clock
 whether or not the engine keeps up — which is what makes saturation and
 admission-control behaviour (queue growth, rejections) observable.
 
-The virtual clock advances one tick per scheduler loop iteration; one tick
-is one batched decode step when the engine has work, and an idle tick
+The virtual clock is the shared ``repro.clock.VirtualClock`` (tick-driven
+flavour): it advances one tick per scheduler loop iteration; one tick is
+one batched decode step when the engine has work, and an idle tick
 otherwise. ``replay()`` returns the engine's stable ``metrics()`` schema
-plus trace metadata, ready for ``benchmarks/report.py``.
+plus trace metadata, ready for ``benchmarks/report.py``. The event-driven
+flavour of the same clock powers ``repro.fleet.simulator``.
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 
+from repro.clock import VirtualClock
 from repro.models.config import ModelConfig
 from repro.serving.sampling import SamplingParams
 
@@ -72,29 +75,30 @@ class ArrivalTrace:
         return cls(tuple(reqs), seed, mean_interarrival)
 
 
-def replay(engine, trace: ArrivalTrace, max_ticks: int = 100_000
-           ) -> Dict[str, float]:
+def replay(engine, trace: ArrivalTrace, max_ticks: int = 100_000,
+           clock: Optional[VirtualClock] = None) -> Dict[str, float]:
     """Drive ``engine`` through ``trace`` on a virtual clock and return the
     stable metrics schema (see scheduler.METRIC_KEYS) + trace metadata."""
+    clock = clock or VirtualClock()
     reqs = []
     i = 0
-    clock = 0
-    while (i < len(trace.requests) or engine.has_work) and clock < max_ticks:
+    while (i < len(trace.requests) or engine.has_work) \
+            and clock.ticks < max_ticks:
         while (i < len(trace.requests)
-               and trace.requests[i].arrival_step <= clock):
+               and trace.requests[i].arrival_step <= clock.ticks):
             tr = trace.requests[i]
             reqs.append(engine.submit(tr.tokens, tr.max_new_tokens,
                                       sampling=tr.sampling,
                                       priority=tr.priority))
             i += 1
         engine.step()
-        clock += 1
+        clock.tick()
     report = engine.metrics(reqs)
     report.update(
         trace_requests=len(trace.requests),
         trace_seed=trace.seed,
         trace_mean_interarrival=trace.mean_interarrival,
         offered_tokens=trace.offered_tokens,
-        clock_ticks=clock,
+        clock_ticks=clock.ticks,
     )
     return report

@@ -1,0 +1,310 @@
+"""Fleet v2 tests: the shared virtual clock, windowed telemetry, staged
+rollout state machine (sync + event-driven), failure paths (gate regression
+-> rollback, mid-wave install failure -> clean abort, offline -> reconverge)
+and simulator determinism (same seed -> byte-identical event log)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro import configs as C
+from repro.api import (ArtifactRegistry, Deployment, DeviceProfile,
+                       FaultPlan, HealthGate, ModelArtifact, RolloutPolicy,
+                       VariantSpec, WorkloadModel)
+from repro.clock import VirtualClock, now, use_clock
+from repro.fleet.simulator import DeviceSpec
+from repro.fleet.telemetry import InferenceRecord, TelemetryHub
+from repro.models import init_params
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    cfg = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    registry = ArtifactRegistry(str(tmp_path_factory.mktemp("reg")))
+    specs = [VariantSpec.fp32(), VariantSpec.dynamic_int8()]
+    for version in ("v1", "v2"):
+        registry.publish_variants(
+            ModelArtifact.create("m", version, params, cfg), specs)
+    return cfg, params, registry
+
+
+# --------------------------------------------------------------------- #
+# Shared clock layer
+# --------------------------------------------------------------------- #
+def test_virtual_clock_event_order_and_ties():
+    clock = VirtualClock()
+    fired = []
+    clock.schedule_at(5.0, fired.append, "late")
+    clock.schedule_at(1.0, fired.append, "a")
+    clock.schedule_at(1.0, fired.append, "b")     # tie: FIFO by seq
+    n = clock.run(until=2.0)
+    assert fired == ["a", "b"] and n == 2
+    assert clock.now() == 2.0
+    clock.run()
+    assert fired == ["a", "b", "late"] and clock.now() == 5.0
+
+
+def test_virtual_clock_cancel_and_tick():
+    clock = VirtualClock(start=10.0)
+    fired = []
+    h = clock.schedule(1.0, fired.append, "x")
+    clock.cancel(h)
+    clock.run()
+    assert fired == [] and clock.pending == 0
+    assert clock.now() == 10.0        # cancelled events don't advance time
+    clock.tick(0.5)
+    assert clock.ticks == 1 and clock.now() == 10.5
+
+
+def test_use_clock_scopes_active_time():
+    vc = VirtualClock(start=42.0)
+    with use_clock(vc):
+        assert now() == 42.0
+        rec = InferenceRecord("d", "m:v1:fp32", 1.0)
+        assert rec.t == 42.0
+    assert now() != 42.0     # back on wall time
+
+
+# --------------------------------------------------------------------- #
+# Windowed telemetry
+# --------------------------------------------------------------------- #
+def test_telemetry_window_eviction_and_rolling_aggregates():
+    hub = TelemetryHub(window=10, retrain_capacity=3)
+    for i in range(25):
+        hub.push(InferenceRecord("dev", "m:v1:fp32", latency_ms=float(i + 1),
+                                 confidence=0.1, correct=(i % 5 != 0), t=i))
+    assert len(hub.records) == 10                   # windowed
+    s = hub.summary()
+    assert s["total_records"] == 25
+    assert s["evicted_records"] == 15
+    # every record was low-confidence -> retrain buffer capped at 3
+    assert s["retrain_buffered"] == 3
+    assert s["evicted_retrain"] == 22
+    # aggregates cover the FULL stream, not just the window
+    m = hub.model_metrics("m:v1:fp32")
+    assert m["calls"] == 25
+    assert m["accuracy"] == pytest.approx(20 / 25)
+    assert m["error_rate"] == pytest.approx(5 / 25)
+    assert 0 < m["p50_latency_ms"] <= m["p99_latency_ms"]
+    assert hub.device_metrics()["dev"]["calls"] == 25
+    assert hub.model_metrics("unknown") == {"calls": 0}
+
+
+def test_registry_shim_reexports_api_registry():
+    import repro.api.registry as api_reg
+    import repro.fleet.registry as fleet_reg
+
+    assert fleet_reg.ArtifactRegistry is api_reg.ArtifactRegistry
+    assert fleet_reg.ArtifactRef is api_reg.ArtifactRef
+
+
+# --------------------------------------------------------------------- #
+# Synchronous staged rollout (orchestrator)
+# --------------------------------------------------------------------- #
+def _sync_deployment(registry, n=8):
+    dep = Deployment(registry, model="m")
+    for i in range(n):
+        dep.add_device(f"dev-{i}", DeviceProfile(memory_bytes=10**10))
+    return dep
+
+
+def _validate(agent):
+    acc = 0.5 if (agent.artifact and agent.artifact.version == "v2") else 0.98
+    return {"accuracy": acc, "mean_latency_ms": 10.0}
+
+
+def test_staged_rollout_waves_and_audit(setup):
+    _, _, registry = setup
+    dep = _sync_deployment(registry)
+    policy = RolloutPolicy(waves=(0.25, 0.5, 1.0))
+    report = dep.staged_rollout("v1", validate=_validate, policy=policy)
+    assert report.succeeded and report.waves == 3
+    assert len(report.deployed) == 8
+    kinds = [e["kind"] for e in dep.audit]
+    assert kinds.count("wave_started") == 3
+    assert kinds.count("wave_completed") == 3
+    assert kinds[0] == "rollout_started" and kinds[-1] == "rollout_completed"
+    assert kinds.count("device_activated") == 8
+
+
+def test_staged_rollout_gate_regression_rolls_back_everything(setup):
+    _, _, registry = setup
+    dep = _sync_deployment(registry)
+    dep.staged_rollout("v1", validate=_validate)
+    report = dep.staged_rollout("v2", validate=_validate)   # v2 regresses
+    assert not report.succeeded
+    assert "health gate failed" in report.reason
+    assert report.deployed == []
+    # automatic rollback: every touched device is back on v1
+    for agent in dep.devices.values():
+        assert agent.active.version == "v1"
+    kinds = [e["kind"] for e in dep.audit]
+    assert "gate_failed" in kinds and "rollout_aborted" in kinds
+
+
+# --------------------------------------------------------------------- #
+# Event-driven simulator
+# --------------------------------------------------------------------- #
+def _sim(registry, n=24, seed=0, faults=FaultPlan(), workload=None,
+         policy=None):
+    dep = Deployment(registry, model="m")
+    sim = dep.simulator(seed=seed, faults=faults,
+                        workload=workload or WorkloadModel())
+    sim.add_heterogeneous_fleet(n, inspection_interval_s=5.0)
+    sim.policy = policy or RolloutPolicy(
+        waves=(0.1, 0.5, 1.0), soak_s=15.0, install_stagger_s=0.2,
+        gate=HealthGate(max_accuracy_drop=0.1))
+    return sim
+
+
+def test_simulator_same_seed_identical_event_log(setup):
+    _, _, registry = setup
+
+    def go(seed):
+        sim = _sim(registry, seed=seed,
+                   faults=FaultPlan(offline_rate_per_hour=4.0,
+                                    install_fail_rate=0.1,
+                                    slow_link_rate=0.2,
+                                    flaky_probe_rate=0.1))
+        sim.schedule_rollout("v1", sim.policy, at=10.0)
+        sim.run(until=400.0)
+        return sim.event_log_json()
+
+    assert go(seed=7) == go(seed=7)
+    assert go(seed=7) != go(seed=8)
+
+
+def test_sim_canary_gate_regression_triggers_rollback(setup):
+    _, _, registry = setup
+    sim = _sim(registry, workload=WorkloadModel(
+        version_error_rate={"v2": 0.6}))
+    sim.schedule_rollout("v1", sim.policy, at=10.0)
+    sim.schedule_rollout("v2", sim.policy, at=300.0)
+    sim.run(until=700.0)
+    v1, v2 = sim.rollouts
+    assert v1.status == "complete"
+    assert v2.status == "aborted"
+    assert "health gate" in v2.reason
+    assert v2.mttr_s is not None and v2.mttr_s > 0
+    kinds = [e["kind"] for e in sim.events]
+    assert "gate_failed" in kinds and "rollout_rolled_back" in kinds
+    # every device that took v2 was rolled back to v1
+    for agent in sim.dep.devices.values():
+        assert agent.active is not None and agent.active.version == "v1"
+
+
+def test_sim_midwave_install_failure_aborts_cleanly(setup):
+    _, _, registry = setup
+    sim = _sim(registry)
+    sim.schedule_rollout("v1", sim.policy, at=10.0)
+    sim.run(until=250.0)
+    assert sim.rollouts[0].status == "complete"
+    # now make wave>=1 of the v2 rollout fail persistently: devices 3..11
+    # land in wave 1 of the (0.1, 0.5, 1.0) partition over 24 devices
+    dids = list(sim.dep.devices)
+    sim.faults = FaultPlan(install_fail_devices=frozenset(dids[3:12]))
+    policy = RolloutPolicy(waves=(0.1, 0.5, 1.0), soak_s=15.0,
+                           install_stagger_s=0.2,
+                           max_wave_failure_fraction=0.2,
+                           gate=HealthGate(max_accuracy_drop=0.1))
+    sim.schedule_rollout("v2", policy, at=260.0)
+    sim.run(until=700.0)
+    v2 = sim.rollouts[1]
+    assert v2.status == "aborted"
+    assert "installs failed" in v2.reason
+    # clean abort: nobody is left on v2, canaries rolled back to v1
+    for agent in sim.dep.devices.values():
+        assert agent.active is not None and agent.active.version == "v1"
+    kinds = [e["kind"] for e in sim.events]
+    assert "install_failed" in kinds and "rollout_aborted" in kinds
+
+
+def test_sim_offline_device_reconverges_on_reconnect(setup):
+    _, _, registry = setup
+    dep = Deployment(registry, model="m")
+    sim = dep.simulator(
+        seed=1, faults=FaultPlan(offline_windows={"dev-1": ((20.0, 300.0),)}))
+    for i in range(6):
+        sim.add_device(DeviceSpec(f"dev-{i}",
+                                  DeviceProfile(memory_bytes=10**10),
+                                  inspection_interval_s=5.0))
+    policy = RolloutPolicy(waves=(0.2, 1.0), soak_s=15.0,
+                           gate=HealthGate(max_accuracy_drop=0.1))
+    sim.schedule_rollout("v1", policy, at=50.0)
+    sim.run(until=250.0)
+    ro = sim.rollouts[0]
+    assert ro.status == "complete"
+    assert "dev-1" in ro.pending                  # straggler, still offline
+    assert sim.dep.devices["dev-1"].active is None
+    kinds = [e["kind"] for e in sim.events]
+    assert "install_deferred" in kinds
+    sim.run(until=500.0)                          # device back at t=300
+    assert "device_reconverged" in [e["kind"] for e in sim.events]
+    assert sim.dep.devices["dev-1"].active.version == "v1"
+    assert not ro.pending
+    # convergence time accounts for the late joiner
+    assert ro.convergence_s > 250.0
+
+
+def test_sim_straggler_resumes_earlier_rollout_with_later_one_queued(setup):
+    """A device offline through rollout A must still re-converge on
+    reconnect even when rollout B is already scheduled (the resume must
+    target the newest STARTED rollout, not the latest-scheduled one)."""
+    _, _, registry = setup
+    dep = Deployment(registry, model="m")
+    sim = dep.simulator(
+        seed=3, faults=FaultPlan(offline_windows={"dev-2": ((20.0, 300.0),)}))
+    for i in range(5):
+        sim.add_device(DeviceSpec(f"dev-{i}",
+                                  DeviceProfile(memory_bytes=10**10),
+                                  inspection_interval_s=5.0))
+    policy = RolloutPolicy(waves=(0.2, 1.0), soak_s=15.0,
+                           gate=HealthGate(max_accuracy_drop=0.1))
+    sim.schedule_rollout("v1", policy, at=50.0)       # dev-2 misses this
+    sim.schedule_rollout("v2", policy, at=600.0)      # queued up front
+    sim.run(until=500.0)                              # dev-2 back at t=300
+    assert sim.rollouts[0].status == "complete"
+    assert sim.dep.devices["dev-2"].active is not None
+    assert sim.dep.devices["dev-2"].active.version == "v1"
+    assert "device_reconverged" in [e["kind"] for e in sim.events]
+    sim.run(until=1200.0)
+    assert sim.rollouts[1].status == "complete"
+    assert sim.dep.devices["dev-2"].active.version == "v2"
+
+
+def test_sim_devices_share_backend_pinned_engines(setup):
+    cfg, params, registry = setup
+    dep = Deployment(registry, model="m")
+    sim = dep.simulator(seed=0)
+    for i in range(4):
+        sim.add_device(DeviceSpec(f"dev-{i}",
+                                  DeviceProfile(memory_bytes=10**10),
+                                  backend="ref"))
+    policy = RolloutPolicy(waves=(1.0,), gated_waves=0)
+    sim.schedule_rollout("v1", policy, at=1.0)
+    sim.run(until=60.0)
+    agents = list(sim.dep.devices.values())
+    assert all(a.active is not None for a in agents)
+    # one artifact fetch, one jit session for the whole fleet
+    assert sim.pool.fetches == 1
+    assert len({id(a.session) for a in agents}) == 1
+    batch = make_batch(cfg)
+    out = agents[0].infer(batch)
+    expected = ModelArtifact.create("m", "v1", params, cfg) \
+        .session(backend="ref").logits(batch)
+    assert bool(jnp.all(out == expected))
+
+
+def test_sim_telemetry_is_windowed_under_load(setup):
+    _, _, registry = setup
+    dep = Deployment(registry, model="m", telemetry=TelemetryHub(window=200))
+    sim = dep.simulator(seed=2)
+    sim.add_heterogeneous_fleet(12, inspection_interval_s=2.0)
+    sim.schedule_rollout("v1", RolloutPolicy(waves=(1.0,), gated_waves=0),
+                         at=1.0)
+    m = sim.run(until=500.0)
+    ts = m["telemetry"]
+    assert ts["retained_records"] == 200
+    assert ts["evicted_records"] == ts["total_records"] - 200
+    assert ts["total_records"] > 1000
