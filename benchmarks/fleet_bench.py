@@ -15,6 +15,7 @@ scripts/compare_bench.py).
 from __future__ import annotations
 
 import tempfile
+import types
 from typing import Any, Dict, List, Tuple
 
 import jax
@@ -69,6 +70,63 @@ def _simulate(registry: ArtifactRegistry, n_devices: int,
     return sim, sim.rollouts[1]
 
 
+def _kv_pressure(registry, cfg) -> Tuple[List[str], Dict[str, Any]]:
+    """Per-device-class paged serving under the EnginePool's memory
+    accounting (KV-cache v2): each class gets a block budget proportional
+    to its profile RAM, so the Pi-4 / lite classes run visibly tighter
+    pools (preemptions) than the standard class on the same shared-prefix
+    inspection workload."""
+    import jax.numpy as jnp
+
+    from repro.fleet.simulator import (DEVICE_CLASSES, EnginePool,
+                                       profile_variant_policy)
+    from repro.serving.kvcache import kv_bytes_per_block
+
+    block_size = 8
+    pool = EnginePool(registry)
+    # calibrate the RAM fraction so the 2 GiB lite class lands on a ~4
+    # usable-block pool for the smoke model (real models use the default
+    # fraction; the *ratios* between classes are what the bench pins)
+    lite_ram = min(p.memory_bytes for _, p, _, _ in DEVICE_CLASSES)
+    frac = 5.0 * kv_bytes_per_block(cfg, block_size) / lite_ram
+    key = jax.random.PRNGKey(3)
+    kp, ks = jax.random.split(key)
+    prefix = jax.random.randint(kp, (1, 8), 0, cfg.vocab_size)
+    prompts = [jnp.concatenate(
+        [prefix, jax.random.randint(jax.random.fold_in(ks, i), (1, 4),
+                                    0, cfg.vocab_size)], axis=1)
+        for i in range(12)]
+    lines: List[str] = []
+    results: Dict[str, Any] = {}
+    for cls, profile, _, _ in DEVICE_CLASSES:
+        # the variant policy only inspects .profile
+        variant = profile_variant_policy(
+            types.SimpleNamespace(profile=profile))
+        ref = registry.ref("vqi", "v2", variant)
+        engine = pool.serving_engine(ref, profile=profile,
+                                     kv_fraction=frac, n_slots=2,
+                                     max_len=32, block_size=block_size)
+        engine.warmup()
+        reqs = [engine.submit(p, max_new_tokens=8) for p in prompts]
+        engine.run()
+        m = engine.metrics(reqs)
+        results[cls] = {
+            "variant": variant,
+            "budget_bytes": pool.kv_budget_bytes(profile, frac),
+            "usable_blocks": engine.kv.alloc.usable_blocks,
+            "completed": m["completed"],
+            "preempted": m["preempted"],
+            "prefix_hit_rate": m["prefix_hit_rate"],
+            "kv_blocks_peak": m["kv_blocks_peak"],
+            "kv_hbm_bytes_per_req": m["kv_hbm_bytes_per_req"],
+        }
+        lines.append(
+            f"fleet_kv_{cls}_preempted,{m['preempted']:.0f},"
+            f"blocks={engine.kv.alloc.usable_blocks} "
+            f"hit_rate={m['prefix_hit_rate']:.2f} variant={variant}")
+    return lines, results
+
+
 def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -105,12 +163,16 @@ def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
                      f"rolled_back={len(bad.rolled_back)} "
                      f"reason=gate_failed")
 
+        kv_lines, kv_pressure = _kv_pressure(registry, cfg)
+        lines.extend(kv_lines)
+
         payload = {
             "arch": ARCH,
             "seed": SEED,
             "devices": n_devices,
             "policy_waves": list(POLICY.waves),
             "variants": variants,
+            "kv_pressure": kv_pressure,
             "rollout": {
                 "rollout_convergence_s": conv_s,
                 "rollback_mttr_s": mttr_s,

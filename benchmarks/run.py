@@ -56,14 +56,15 @@ def main() -> None:
         print(line)
     sys.stdout.flush()
     if args.json:
+        #: payload sections that carry *metrics* (flattened + gated by
+        #: scripts/compare_bench.py); everything else is run config
+        result_keys = ("variants", "rollout", "shared_prefix", "kv_pressure")
         for bench, payload in (("quant", quant_payload),
                                ("serving", serving_payload),
                                ("fleet", fleet_payload)):
-            results = {"variants": payload["variants"]}
-            if "rollout" in payload:
-                results["rollout"] = payload["rollout"]
+            results = {k: payload[k] for k in result_keys if k in payload}
             config = {k: v for k, v in payload.items()
-                      if k not in ("variants", "rollout")}
+                      if k not in result_keys}
             config["fast"] = args.fast
             path = write_report(args.json, bench, results, config)
             print(f"# wrote {path}", file=sys.stderr)

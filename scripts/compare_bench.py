@@ -10,6 +10,7 @@ metric regresses by more than ``--threshold`` (default 20%):
 
     throughput_tok_s        lower is worse   (serving)
     mean_ttft_s             higher is worse  (serving)
+    kv_hbm_bytes_per_req    higher is worse  (serving, KV-cache v2)
     rollout_convergence_s   higher is worse  (fleet)
     fleet_p99_latency_ms    higher is worse  (fleet)
 
@@ -26,6 +27,7 @@ from typing import Dict
 
 #: metric leaf name -> direction ("higher"/"lower" = which way is better)
 GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower",
+         "kv_hbm_bytes_per_req": "lower",
          "rollout_convergence_s": "lower", "fleet_p99_latency_ms": "lower"}
 
 

@@ -49,6 +49,12 @@ class Backend:
     def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
         raise NotImplementedError
 
+    def paged_decode(self, q, k_pool, v_pool, tables, pos):
+        raise NotImplementedError
+
+    def paged_qdecode(self, q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+        raise NotImplementedError
+
     def __repr__(self) -> str:
         return f"<Backend {self.name}>"
 
@@ -70,6 +76,13 @@ class RefBackend(Backend):
 
     def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
         return _ref.qdecode_ref(q, k_i8, k_s, v_i8, v_s, bias)
+
+    def paged_decode(self, q, k_pool, v_pool, tables, pos):
+        return _ref.paged_decode_ref(q, k_pool, v_pool, tables, pos)
+
+    def paged_qdecode(self, q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+        return _ref.paged_qdecode_ref(q, k_pool, k_scale, v_pool, v_scale,
+                                      tables, pos)
 
 
 class PallasBackend(Backend):
@@ -101,6 +114,19 @@ class PallasBackend(Backend):
 
         return _qd.qdecode_attention(q, k_i8, k_s, v_i8, v_s, bias,
                                      interpret=self.interpret)
+
+    def paged_decode(self, q, k_pool, v_pool, tables, pos):
+        from repro.kernels import paged_attn as _pa
+
+        return _pa.paged_decode_attention(q, k_pool, v_pool, tables, pos,
+                                          interpret=self.interpret)
+
+    def paged_qdecode(self, q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+        from repro.kernels import paged_attn as _pa
+
+        return _pa.paged_qdecode_attention(q, k_pool, k_scale, v_pool,
+                                           v_scale, tables, pos,
+                                           interpret=self.interpret)
 
 
 # ------------------------------------------------------------------ #

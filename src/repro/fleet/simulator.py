@@ -50,12 +50,24 @@ GiB = 1024**3
 class EnginePool:
     """Fetch-once, serve-many: artifacts are sha-verified on first fetch
     and ``InferenceSession``s are cached per ``(artifact, backend)`` — the
-    whole fleet shares one engine per variant/backend pair."""
+    whole fleet shares one engine per variant/backend pair.
+
+    KV-cache v2: the pool also hands out *paged serving engines* with
+    per-device-class memory accounting — ``kv_budget_bytes`` carves a
+    fraction of the device profile's RAM into KV blocks, so a Pi-4-class
+    profile gets a small block budget (and visibly preempts under load)
+    while a standard edge box gets a full pool. Engines are cached per
+    (artifact, backend, profile-budget) so a thousand devices of one class
+    share one compiled engine."""
+
+    #: default fraction of device RAM granted to the KV block pool
+    KV_FRACTION = 0.25
 
     def __init__(self, registry):
         self.registry = registry
         self._artifacts: Dict[str, Any] = {}
         self._sessions: Dict[Tuple[str, Optional[str]], Any] = {}
+        self._engines: Dict[Tuple, Any] = {}
         self.fetches = 0
 
     def artifact(self, ref):
@@ -71,6 +83,60 @@ class EnginePool:
         if s is None:
             s = self._sessions[k] = self.artifact(ref).session(backend=backend)
         return s
+
+    # ---------------------------------------------------------------- #
+    def kv_budget_bytes(self, profile: DeviceProfile,
+                        fraction: Optional[float] = None) -> int:
+        """Device-class KV budget: ``fraction`` of the profile's RAM."""
+        return int(profile.memory_bytes * (fraction if fraction is not None
+                                           else self.KV_FRACTION))
+
+    def serving_engine(self, ref, backend: Optional[str] = None,
+                       profile: Optional[DeviceProfile] = None, *,
+                       kv_fraction: Optional[float] = None,
+                       n_slots: int = 2, max_len: int = 128,
+                       block_size: int = 16):
+        """Paged ``ContinuousBatchingEngine`` sized for ``profile``'s KV
+        budget (full pool when no profile), cached per class so the whole
+        device class shares one engine."""
+        from repro.serving.scheduler import ContinuousBatchingEngine
+
+        budget = (self.kv_budget_bytes(profile, kv_fraction)
+                  if profile is not None else None)
+        key = (ref.key, backend, profile.name if profile else None,
+               budget, n_slots, max_len, block_size)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = ContinuousBatchingEngine(
+                self.artifact(ref), backend=backend, n_slots=n_slots,
+                max_len=max_len, paged=True, block_size=block_size,
+                kv_budget_bytes=budget)
+            self._engines[key] = eng
+        return eng
+
+    def memory_report(self) -> Dict[str, Dict[str, Any]]:
+        """Per-engine KV accounting: pool capacity, bytes/block, peak
+        blocks touched — the fleet-side view of cache memory pressure."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for (akey, backend, pname, budget, n_slots, max_len,
+             block_size), eng in self._engines.items():
+            kv = eng.kv
+            # key mirrors the full cache key: engines differing only in
+            # budget/geometry must not overwrite each other in the report
+            out[f"{akey}@{backend or 'default'}/{pname or 'unbounded'}"
+                f"/{budget or 'full'}b/{n_slots}x{max_len}/bs{block_size}"] = {
+                "budget_bytes": budget,
+                "n_blocks": kv.alloc.usable_blocks,
+                "bytes_per_block": kv.bytes_per_block,
+                "kv_capacity_bytes": kv.bytes_per_block
+                * kv.alloc.usable_blocks,
+                "kv_blocks_peak": kv.alloc.stats.peak_in_use,
+                "kv_peak_bytes": kv.kv_bytes_in_use(
+                    kv.alloc.stats.peak_in_use),
+                "preempted": eng.preempted_total,
+                "prefix_hit_tokens": eng.prefix_hit_tokens,
+            }
+        return out
 
     def stats(self) -> Dict[str, Any]:
         return {f"{key}@{backend or 'default'}": sess.stats

@@ -65,3 +65,17 @@ def quantize_weights(w):
 def qdecode(q, k_i8, k_s, v_i8, v_s, bias):
     """int8-KV decode attention (fused dequant). q [B,Hkv,G,hd]."""
     return _backend().qdecode(q, k_i8, k_s, v_i8, v_s, bias)
+
+
+def paged_decode(q, k_pool, v_pool, tables, pos):
+    """Paged decode attention over block pools (KV-cache v2).
+
+    q [B,Hkv,G,hd]; pools [N,bs,Hkv,hd]; tables [B,M] int32 (-1 =
+    unallocated); pos [B] int32. Returns [B,Hkv,G,hd] f32."""
+    return _backend().paged_decode(q, k_pool, v_pool, tables, pos)
+
+
+def paged_qdecode(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+    """int8-KV paged decode attention; scale pools [N,bs,Hkv] f32."""
+    return _backend().paged_qdecode(q, k_pool, k_scale, v_pool, v_scale,
+                                    tables, pos)

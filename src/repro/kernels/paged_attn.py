@@ -1,0 +1,169 @@
+"""Paged gather-attention Pallas kernels (KV-cache v2 tentpole).
+
+Decode attention that reads K/V straight out of the shared block pool via
+per-sequence block tables — the dense ``[B, S]`` cache view never
+materializes in HBM. The block table (and per-sequence positions) ride the
+TPU scalar-prefetch path: the grid is ``(B, Hkv, M)`` and the *index map*
+of the K/V pool specs picks physical block ``tables[b, m]`` for grid step
+``m``, so the pipeline DMAs exactly the blocks each sequence owns — paging
+is free, it happens in the prefetch unit.
+
+Softmax is accumulated online across the ``M`` (innermost, sequential) grid
+dimension flash-attention style, with running max / normalizer / weighted
+accumulator in VMEM scratch.
+
+Two variants share the machinery:
+
+    paged_decode_attention    fp32/bf16 pools
+    paged_qdecode_attention   int8 pools + per-(block, slot, head) f32
+                              scales, dequant fused into the dots (HBM
+                              traffic: 1 byte/elem, same scheme as qdecode)
+
+Shapes:
+    q           [B, Hkv, G, hd]    (G = query heads per kv head)
+    k/v pool    [N, bs, Hkv, hd]   (bs = tokens per block)
+    k/v scales  [N, bs, Hkv]       (int8 variant)
+    tables      [B, M] int32       (-1 = unallocated, clamped + masked)
+    pos         [B]   int32        (current write position, inclusive)
+    out         [B, Hkv, G, hd]    f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+RUN_INIT = -1.0e30          # running-max seed (fits f32 after subtraction)
+
+
+def _slot_mask(tables_ref, pos_ref, bi, mi, bs):
+    """[1, bs] validity for block ``mi`` of sequence ``bi``."""
+    slots = mi * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    ok = (slots <= pos_ref[bi]) & (tables_ref[bi, mi] >= 0)
+    return ok
+
+
+def _accumulate(scores, v, o_ref, acc_ref, m_ref, l_ref, mi, last):
+    """One online-softmax step: scores [G, bs] (masked), v [bs, hd]."""
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, RUN_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    m_prev = m_ref[...]                                    # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                        # [G, 1]
+    p = jnp.exp(scores - m_new)                            # [G, bs]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(mi == last)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...] / l_ref[...]
+
+
+def _fp_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref):
+    bi, mi = pl.program_id(0), pl.program_id(2)
+    bs = k_ref.shape[1]
+    q = q_ref[0, 0].astype(jnp.float32)                    # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # [bs, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    hd = q.shape[-1]
+    scores = jax.lax.dot_general(                          # [G, bs]
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(_slot_mask(tables_ref, pos_ref, bi, mi, bs),
+                       scores, NEG_INF)
+    _accumulate(scores, v, o_ref, acc_ref, m_ref, l_ref, mi,
+                pl.num_programs(2) - 1)
+
+
+def _q_kernel(tables_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+              o_ref, acc_ref, m_ref, l_ref):
+    bi, mi = pl.program_id(0), pl.program_id(2)
+    bs = k_ref.shape[1]
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # int8 -> f32
+    ks = ks_ref[0, :, 0]                                   # [bs]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    vs = vs_ref[0, :, 0]
+    hd = q.shape[-1]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    scores = scores * ks[None, :] / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(_slot_mask(tables_ref, pos_ref, bi, mi, bs),
+                       scores, NEG_INF)
+    # fold v scales into v (per-slot broadcast) — same products/order as
+    # scaling the probabilities, so the accumulator is shared with fp
+    _accumulate(scores, v * vs[:, None], o_ref, acc_ref, m_ref, l_ref, mi,
+                pl.num_programs(2) - 1)
+
+
+def _pool_spec(bs, hd):
+    # index map args: (grid indices..., scalar-prefetch refs) — block m of
+    # sequence b lives at physical pool row tables[b, m] (clamped: -1 reads
+    # the reserved trash block, masked out by _slot_mask)
+    return pl.BlockSpec(
+        (1, bs, 1, hd),
+        lambda b, h, m, tabs, pos: (jnp.maximum(tabs[b, m], 0), 0, h, 0))
+
+
+def _scale_spec(bs):
+    return pl.BlockSpec(
+        (1, bs, 1),
+        lambda b, h, m, tabs, pos: (jnp.maximum(tabs[b, m], 0), 0, h))
+
+
+def _q_spec(g, hd):
+    return pl.BlockSpec((1, 1, g, hd), lambda b, h, m, tabs, pos: (b, h, 0, 0))
+
+
+def _call(kernel, q, pools_and_specs, tables, pos, interpret):
+    b, hkv, g, hd = q.shape
+    m = tables.shape[1]
+    arrays, in_specs = zip(*pools_and_specs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, m),
+        in_specs=[_q_spec(g, hd), *in_specs],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, h, m_, tabs, pos_: (b_, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, hd), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), pos.astype(jnp.int32), q, *arrays)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, tables, pos, *,
+                           interpret: bool = False):
+    """fp32/bf16 paged decode attention — see module docstring for shapes."""
+    bs, hd = k_pool.shape[1], k_pool.shape[3]
+    return _call(_fp_kernel, q,
+                 [(k_pool, _pool_spec(bs, hd)), (v_pool, _pool_spec(bs, hd))],
+                 tables, pos, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_qdecode_attention(q, k_pool, k_scale, v_pool, v_scale, tables, pos,
+                            *, interpret: bool = False):
+    """int8-KV paged decode attention with fused dequant."""
+    bs, hd = k_pool.shape[1], k_pool.shape[3]
+    return _call(_q_kernel, q,
+                 [(k_pool, _pool_spec(bs, hd)), (k_scale, _scale_spec(bs)),
+                  (v_pool, _pool_spec(bs, hd)), (v_scale, _scale_spec(bs))],
+                 tables, pos, interpret)

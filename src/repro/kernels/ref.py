@@ -53,6 +53,62 @@ def quantize_kv_ref(t):
     return q, scale
 
 
+NEG_INF = -2.0e38
+
+
+def paged_gather(pool, tables):
+    """pool [N, bs, ...] + tables [B, M] -> contiguous view [B, M*bs, ...].
+    Entries for table value -1 read block 0 (the reserved trash block) and
+    MUST be masked by the caller (``paged_valid``). Single source of truth
+    for the paged layout — the model layer imports these too."""
+    g = pool[jnp.maximum(tables, 0)]
+    b, m, bs = g.shape[:3]
+    return g.reshape((b, m * bs) + g.shape[3:])
+
+
+def paged_valid(tables, pos, block_size: int):
+    """[B, M*bs] mask: slot index <= pos AND the covering block is mapped."""
+    b, m = tables.shape
+    slots = jnp.arange(m * block_size)
+    allocated = jnp.repeat(tables >= 0, block_size, axis=1)
+    return (slots[None] <= pos[:, None]) & allocated
+
+
+def _paged_bias(tables, pos, block_size: int):
+    """[B, M*bs] additive mask: 0 where valid, NEG_INF elsewhere."""
+    return jnp.where(paged_valid(tables, pos, block_size),
+                     0.0, NEG_INF).astype(jnp.float32)
+
+
+def paged_decode_ref(q, k_pool, v_pool, tables, pos):
+    """Paged decode attention oracle (fp pools).
+
+    q [B,Hkv,G,hd]; k_pool/v_pool [N,bs,Hkv,hd]; tables [B,M]; pos [B].
+    Gathers the blocks into a contiguous view and runs plain masked
+    attention — the allclose target for the Pallas gather kernel."""
+    hd = q.shape[-1]
+    kf = paged_gather(k_pool, tables).astype(jnp.float32)
+    vf = paged_gather(v_pool, tables).astype(jnp.float32)
+    bias = _paged_bias(tables, pos, k_pool.shape[1])
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qf, kf) / jnp.sqrt(hd)
+    scores = scores + bias[:, None, None, :]
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bkgs,bskh->bkgh", p, vf)
+
+
+def paged_qdecode_ref(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+    """int8-KV paged decode oracle: gather payloads + scales, then the
+    contiguous int8 oracle."""
+    kg = paged_gather(k_pool, tables)
+    vg = paged_gather(v_pool, tables)
+    ksg = paged_gather(k_scale, tables)
+    vsg = paged_gather(v_scale, tables)
+    bias = _paged_bias(tables, pos, k_pool.shape[1])
+    return qdecode_ref(q, kg, ksg, vg, vsg, bias)
+
+
 def qmatmul_dynamic_ref(x, w_int8, w_scale):
     """Dynamic w8a8: per-row activation scale computed at run time."""
     absmax = jnp.maximum(

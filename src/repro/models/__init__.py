@@ -1,6 +1,7 @@
 from repro.models.config import ModelConfig
 from repro.models.transformer import (
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
     init_params,
@@ -12,6 +13,7 @@ __all__ = [
     "forward",
     "prefill",
     "decode_step",
+    "decode_step_paged",
     "init_cache",
     "init_params",
 ]

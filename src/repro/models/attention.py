@@ -8,6 +8,15 @@ Decode consumes a KV cache: full-attention caches hold seq_len entries,
 sliding-window caches are ring buffers of ``window`` entries (this is what
 makes long_500k decode sub-quadratic), MLA caches hold the compressed
 ``c_kv``/``k_rope`` streams (kv_lora_rank = 512 per the paper).
+
+Paged decode (KV-cache v2): ``gqa_decode_paged`` / ``mla_decode_paged``
+read a *pooled* cache through per-request block tables instead of a dense
+``[B, S]`` reservation — cache leaves are ``[N, block_size, ...]`` pools
+shared by every request (see ``repro.serving.kvcache``), ``tables`` is
+``[B, max_blocks]`` int32 with -1 for unallocated entries. The GQA read is
+dispatched to the ``paged_decode`` / ``paged_qdecode`` backend primitives
+(ref gather oracle or the Pallas gather-attention kernel); MLA gathers the
+compressed streams and reuses the dense attention cores.
 """
 from __future__ import annotations
 
@@ -16,6 +25,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+# gather / validity semantics live in ONE place (the kernel ref oracles) so
+# the model layer and the kernels cannot drift apart
+from repro.kernels.ref import paged_gather, paged_valid
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init, linear, rms_norm
 
@@ -266,6 +278,65 @@ def gqa_decode(p, x, cache_kv, pos, cfg: ModelConfig, window: int = 0):
 
 
 # ----------------------------------------------------------------------- #
+# Paged decode (block-table cache, KV-cache v2)
+# ----------------------------------------------------------------------- #
+def paged_write_slots(tables, pos_vec, block_size: int):
+    """(block_id [B], offset [B]) for writing position ``pos`` per sequence.
+    Unallocated entries clamp to the reserved trash block 0 (the scheduler
+    guarantees allocation before the step; the clamp keeps the write safe
+    under jit even for idle slots)."""
+    blk = jnp.take_along_axis(tables, (pos_vec // block_size)[:, None],
+                              axis=1)[:, 0]
+    return jnp.maximum(blk, 0), pos_vec % block_size
+
+
+def gqa_decode_paged(p, x, cache, pos, tables, cfg: ModelConfig):
+    """x [B,1,d]; cache: (k_pool, v_pool) [N,bs,Hkv,hd] (or the int8
+    4-tuple with per-(block, slot, head) scale pools); tables [B,M] int32;
+    pos scalar or [B]. Writes this token's K/V into its table's block, then
+    reads the whole sequence through the table via the backend's
+    paged-attention primitive."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    int8_kv = cfg.kv_cache_int8
+    if int8_kv:
+        k_pool, k_scale, v_pool, v_scale = cache
+    else:
+        k_pool, v_pool = cache
+    block_size = k_pool.shape[1]
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    pos_b = pos_vec[:, None]
+    q = linear(p["wq"], x).reshape(b, 1, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k = apply_rope(k, pos_b, cfg.rope_theta)
+
+    blk, off = paged_write_slots(tables, pos_vec, block_size)
+    from repro.kernels import ops  # backend-dispatched paged attention
+
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    qg = q.reshape(b, hkv, hq // hkv, hd)
+    if int8_kv:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_pool = k_pool.at[blk, off].set(kq[:, 0])
+        v_pool = v_pool.at[blk, off].set(vq[:, 0])
+        k_scale = k_scale.at[blk, off].set(ks[:, 0])
+        v_scale = v_scale.at[blk, off].set(vs[:, 0])
+        out = ops.paged_qdecode(qg, k_pool, k_scale, v_pool, v_scale,
+                                tables, pos_vec)
+        new_cache = (k_pool, k_scale, v_pool, v_scale)
+    else:
+        k_pool = k_pool.at[blk, off].set(k[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[blk, off].set(v[:, 0].astype(v_pool.dtype))
+        out = ops.paged_decode(qg, k_pool, v_pool, tables, pos_vec)
+        new_cache = (k_pool, v_pool)
+    out = out.astype(x.dtype).reshape(b, 1, hq * hd)
+    return linear(p["wo"], out), new_cache
+
+
+# ----------------------------------------------------------------------- #
 # MLA prefill / decode (naive up-projection; absorbed variant in §Perf)
 # ----------------------------------------------------------------------- #
 def _mla_qkv(p, x, c_kv, k_rope, q_positions, kv_positions, cfg: ModelConfig):
@@ -302,28 +373,13 @@ def mla_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
                  _ring_or_pad(k_rope, s, window, pad_to))
 
 
-def mla_decode_absorbed(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
-    """Weight-absorbed MLA decode (§Perf #2, deepseek-v2 decode_32k).
-
-    The naive path up-projects the whole compressed cache to per-head K/V
-    every step: O(S*H*(dn+dv)*rank) flops and a [B,S,H,dn+dr]
-    materialization. Absorbing W_uk into the query and W_uv into the output
-    scores directly against c_kv: O(S*H*rank) per step — ~(dn+dv)/rank-fold
-    less compute and no big intermediate.
-    """
+def _mla_attend_absorbed(p, x, c_kv, k_rope, pos_b, k_pos, valid,
+                         cfg: ModelConfig):
+    """Weight-absorbed MLA attention over an (already updated) compressed
+    cache view — shared by the dense and paged decode paths."""
     b = x.shape[0]
     nh, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     rank = cfg.kv_lora_rank
-    c_kv, k_rope = cache
-    s_cache = c_kv.shape[1]
-    pos_vec, slot_vec, k_pos, valid = decode_positions(pos, b, s_cache, window)
-    pos_b = pos_vec[:, None]
-
-    c_new = linear(p["w_dkv"], x)
-    kr_new = linear(p["w_kr"], x)
-    c_kv = _batched_update(c_kv, c_new, slot_vec)
-    k_rope = _batched_update(k_rope, kr_new, slot_vec)
-
     if cfg.q_lora_rank:
         cq = rms_norm(p["q_norm"], linear(p["w_dq"], x), cfg.norm_eps)
         q = linear(p["w_uq"], cq).reshape(b, 1, nh, dn + dr)
@@ -359,8 +415,42 @@ def mla_decode_absorbed(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
                      preferred_element_type=jnp.float32)
     out = jnp.einsum("bhr,rhd->bhd", ctx.astype(x.dtype), w_uv,
                      preferred_element_type=jnp.float32)
-    out = out.astype(x.dtype).reshape(b, 1, nh * dv)
+    return out.astype(x.dtype).reshape(b, 1, nh * dv)
+
+
+def mla_decode_absorbed(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
+    """Weight-absorbed MLA decode (§Perf #2, deepseek-v2 decode_32k).
+
+    The naive path up-projects the whole compressed cache to per-head K/V
+    every step: O(S*H*(dn+dv)*rank) flops and a [B,S,H,dn+dr]
+    materialization. Absorbing W_uk into the query and W_uv into the output
+    scores directly against c_kv: O(S*H*rank) per step — ~(dn+dv)/rank-fold
+    less compute and no big intermediate.
+    """
+    b = x.shape[0]
+    c_kv, k_rope = cache
+    s_cache = c_kv.shape[1]
+    pos_vec, slot_vec, k_pos, valid = decode_positions(pos, b, s_cache, window)
+    c_kv = _batched_update(c_kv, linear(p["w_dkv"], x), slot_vec)
+    k_rope = _batched_update(k_rope, linear(p["w_kr"], x), slot_vec)
+    out = _mla_attend_absorbed(p, x, c_kv, k_rope, pos_vec[:, None], k_pos,
+                               valid, cfg)
     return linear(p["wo"], out), (c_kv, k_rope)
+
+
+def _mla_attend_naive(p, x, c_kv, k_rope, pos_b, k_pos, valid,
+                      cfg: ModelConfig):
+    """Naive (re-up-projecting) MLA attention over an updated cache view —
+    shared by the dense and paged decode paths."""
+    b = x.shape[0]
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope, pos_b, k_pos, cfg)
+    hd = q.shape[-1]
+    scores = _score_einsum("bqnh,btnh->bnqt", q, k, cfg.opt_attn_accum)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnqt,btnh->bqnh", probs, v)
+    return out.reshape(b, 1, cfg.n_heads * cfg.v_head_dim)
 
 
 def mla_decode(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
@@ -375,17 +465,35 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
     c_kv, k_rope = cache
     s_cache = c_kv.shape[1]
     pos_vec, slot_vec, k_pos, valid = decode_positions(pos, b, s_cache, window)
-    pos_b = pos_vec[:, None]
-    c_new = linear(p["w_dkv"], x)
-    kr_new = linear(p["w_kr"], x)
-    c_kv = _batched_update(c_kv, c_new, slot_vec)
-    k_rope = _batched_update(k_rope, kr_new, slot_vec)
-    q, k, v = _mla_qkv(p, x, c_kv, k_rope, pos_b, k_pos, cfg)
-    hd = q.shape[-1]
-    scores = _score_einsum("bqnh,btnh->bnqt", q, k, cfg.opt_attn_accum)
-    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
-    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
-    out = jnp.einsum("bnqt,btnh->bqnh", probs, v)
-    out = out.reshape(b, 1, cfg.n_heads * cfg.v_head_dim)
+    c_kv = _batched_update(c_kv, linear(p["w_dkv"], x), slot_vec)
+    k_rope = _batched_update(k_rope, linear(p["w_kr"], x), slot_vec)
+    out = _mla_attend_naive(p, x, c_kv, k_rope, pos_vec[:, None], k_pos,
+                            valid, cfg)
     return linear(p["wo"], out), (c_kv, k_rope)
+
+
+def mla_decode_paged(p, x, cache, pos, tables, cfg: ModelConfig):
+    """Paged MLA decode: cache = (c_pool [N,bs,rank], r_pool [N,bs,dr]).
+
+    The compressed streams are head-free, so the paged read is a plain
+    gather through the block table followed by the exact dense attention
+    core (absorbed when cfg.opt_mla_absorb, else naive) — block reuse and
+    admission live in the allocator, the math is unchanged."""
+    b = x.shape[0]
+    c_pool, r_pool = cache
+    block_size = c_pool.shape[1]
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    blk, off = paged_write_slots(tables, pos_vec, block_size)
+    c_pool = c_pool.at[blk, off].set(linear(p["w_dkv"], x)[:, 0]
+                                     .astype(c_pool.dtype))
+    r_pool = r_pool.at[blk, off].set(linear(p["w_kr"], x)[:, 0]
+                                     .astype(r_pool.dtype))
+    c_kv = paged_gather(c_pool, tables)                 # [B, M*bs, rank]
+    k_rope = paged_gather(r_pool, tables)               # [B, M*bs, dr]
+    s = c_kv.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    valid = paged_valid(tables, pos_vec, block_size)
+    attend = (_mla_attend_absorbed if cfg.opt_mla_absorb
+              else _mla_attend_naive)
+    out = attend(p, x, c_kv, k_rope, pos_vec[:, None], k_pos, valid, cfg)
+    return linear(p["wo"], out), (c_pool, r_pool)

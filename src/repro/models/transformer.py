@@ -139,10 +139,19 @@ def _attn_window(cfg: ModelConfig) -> int:
 
 
 def _apply_attn_block(lp, x, cfg: ModelConfig, *, moe: bool, mode: str,
-                      cache=None, positions=None, pos=None, pad_to=0):
+                      cache=None, positions=None, pos=None, pad_to=0,
+                      tables=None):
     window = _attn_window(cfg)
     h = rms_norm(lp["ln1"], x, cfg.norm_eps)
-    if mode == "decode":
+    if mode == "decode" and tables is not None:
+        # paged decode: pooled cache leaves read through block tables
+        if cfg.attention == "mla":
+            a_out, new_cache = attn.mla_decode_paged(lp["attn"], h, cache,
+                                                     pos, tables, cfg)
+        else:
+            a_out, new_cache = attn.gqa_decode_paged(lp["attn"], h, cache,
+                                                     pos, tables, cfg)
+    elif mode == "decode":
         if cfg.attention == "mla":
             a_out, new_cache = attn.mla_decode(lp["attn"], h, cache, pos, cfg,
                                                window=window)
@@ -280,8 +289,10 @@ def lm_head(params, x, cfg: ModelConfig):
 # Full passes
 # ===================================================================== #
 def _backbone(params, x, cfg: ModelConfig, *, mode: str, caches=None,
-              pos=None, pad_to=0):
-    """Runs all layer stacks. caches/pos only for decode; returns new caches."""
+              pos=None, pad_to=0, tables=None):
+    """Runs all layer stacks. caches/pos only for decode; returns new caches.
+    ``tables`` (paged decode) is shared by every attention layer — block ids
+    are per logical sequence, not per layer."""
     s = x.shape[1]
     positions = jnp.arange(s)
     remat = cfg.remat and mode == "train"
@@ -324,7 +335,8 @@ def _backbone(params, x, cfg: ModelConfig, *, mode: str, caches=None,
             def dense_fn(lp, xc, cache):
                 return _apply_attn_block(lp, xc, cfg, moe=False, mode=mode,
                                          cache=cache, positions=positions,
-                                         pos=pos, pad_to=pad_to)
+                                         pos=pos, pad_to=pad_to,
+                                         tables=tables)
             x, hc, a = _run_stack(params["head_layers"], x, cfg, dense_fn, mode=mode,
                                   caches=get(caches, "head_layers"), remat=remat)
             new_caches["head_layers"], aux = hc, _acc_aux(aux, a)
@@ -332,7 +344,7 @@ def _backbone(params, x, cfg: ModelConfig, *, mode: str, caches=None,
         def main_fn(lp, xc, cache):
             return _apply_attn_block(lp, xc, cfg, moe=moe, mode=mode,
                                      cache=cache, positions=positions,
-                                     pos=pos, pad_to=pad_to)
+                                     pos=pos, pad_to=pad_to, tables=tables)
         x, lc, a = _run_stack(params["layers"], x, cfg, main_fn, mode=mode,
                               caches=get(caches, "layers"), remat=remat)
         new_caches["layers"], aux = lc, _acc_aux(aux, a)
@@ -360,6 +372,17 @@ def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
     """tokens [B,1] (or [B,1,K]); pos: scalar int32 position of this token."""
     x = embed_inputs(params, {"tokens": tokens}, cfg)
     x, caches, _ = _backbone(params, x, cfg, mode="decode", caches=caches, pos=pos)
+    return lm_head(params, x, cfg), caches
+
+
+def decode_step_paged(params, caches, tokens, pos, tables, cfg: ModelConfig):
+    """Paged decode step (KV-cache v2): ``caches`` holds pooled block leaves
+    (see ``repro.serving.kvcache.init_paged_pools``), ``tables`` is the
+    per-sequence block table [B, max_blocks] and ``pos`` the per-sequence
+    positions [B]. Same contract as ``decode_step`` otherwise."""
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    x, caches, _ = _backbone(params, x, cfg, mode="decode", caches=caches,
+                             pos=pos, tables=tables)
     return lm_head(params, x, cfg), caches
 
 

@@ -1,4 +1,8 @@
 from repro.serving.engine import InferenceSession, Pipeline, Request, RequestQueue
+from repro.serving.kvcache import (BlockAllocator, PagedKVCache,
+                                   blocks_for_budget, hash_prompt_blocks,
+                                   kv_bytes_per_block, paged_supported,
+                                   pow2_bucket)
 from repro.serving.loadgen import ArrivalTrace, TracedRequest, replay
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.scheduler import METRIC_KEYS, ContinuousBatchingEngine, GenRequest

@@ -17,6 +17,26 @@ import jax.numpy as jnp
 
 from repro.models import decode_step, forward, init_cache, prefill
 from repro.models.config import ModelConfig
+from repro.serving.kvcache import pow2_bucket
+
+
+def interpolated_percentile(xs: Sequence[float], p: float) -> float:
+    """Linear-interpolated percentile over raw samples (numpy's default
+    method) — the exact-sample analog of the quantile semantics in
+    ``repro.fleet.telemetry``. ``xs`` need not be sorted.
+
+    The previous nearest-rank ``xs[int(len(xs) * p)]`` biased high on small
+    samples (e.g. p50 of two samples returned the max)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    if len(s) == 1:
+        return s[0]
+    rank = p * (len(s) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(s) - 1)
+    frac = rank - lo
+    return s[lo] + (s[hi] - s[lo]) * frac
 
 
 @dataclasses.dataclass
@@ -42,15 +62,12 @@ class InferenceStats:
         return self.total_ms / max(self.calls, 1)
 
     def percentile_ms(self, p: float) -> float:
-        if not self.latencies_ms:
-            return 0.0
-        xs = sorted(self.latencies_ms)
-        return xs[min(int(len(xs) * p), len(xs) - 1)]
+        return interpolated_percentile(self.latencies_ms or [], p)
 
 
 class InferenceSession:
     """One loaded artifact. Entry points: logits(), generate(), plus the
-    raw prefill/decode pair for the serving loop.
+    raw bucketed-prefill/decode pair for the serving loop.
 
     ``backend`` pins the session to a kernel backend from the Backend
     registry (``repro.api.backends``): the choice is bound while the
@@ -67,7 +84,12 @@ class InferenceSession:
         self.backend = get_backend(backend) if backend is not None else None
         self.stats = InferenceStats()
         self._forward = self._bind(lambda p, b: forward(p, b, cfg)[0])
-        self._prefill = self._bind(lambda p, b: prefill(p, b, cfg))
+        # power-of-two padded prefill: generate() pads the cache to the next
+        # bucket >= prompt + budget, so distinct prompt lengths share a
+        # handful of compiled shapes instead of recompiling per length
+        self._prefill_bucketed = self._bind(
+            lambda p, b, pad: prefill(p, b, cfg, pad_to=pad),
+            static_argnums=2)
         self._decode = self._bind(
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
 
@@ -76,12 +98,12 @@ class InferenceSession:
         """Serve a ``repro.api.ModelArtifact`` (any quant variant)."""
         return cls(artifact.params, artifact.config, backend=backend)
 
-    def _bind(self, fn):
+    def _bind(self, fn, **jit_kw):
         """jit ``fn`` with this session's backend in scope during tracing,
         baking the kernel choice into the compiled function."""
         from repro.api.backends import use_backend
 
-        jitted = jax.jit(fn)
+        jitted = jax.jit(fn, **jit_kw)
 
         def call(*args):
             with use_backend(self.backend):
@@ -96,10 +118,13 @@ class InferenceSession:
         return out
 
     def generate(self, batch: Dict[str, jax.Array], n_new: int) -> jax.Array:
-        """Greedy decode n_new tokens after a prefill."""
+        """Greedy decode n_new tokens after a prefill. The cache is padded
+        to the next power-of-two bucket >= prompt + n_new (not per-length),
+        bounding recompiles to O(log max_len) shapes."""
         cfg = self.cfg
-        last, cache = self._prefill(self.params, batch)
         tok_len = batch["tokens"].shape[1] + cfg.n_frontend_tokens
+        last, cache = self._prefill_bucketed(self.params, batch,
+                                             pow2_bucket(tok_len + n_new))
         outs = []
         nxt = jnp.argmax(last[..., -1, :], axis=-1).astype(jnp.int32)
         if cfg.n_codebooks > 1:

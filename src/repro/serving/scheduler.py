@@ -25,6 +25,26 @@ v2 (serving as a first-class ``repro.api`` citizen):
 * Admission control: priority scheduling plus ``max_queue_depth`` with
   rejection accounting, surfaced through the stable ``metrics()`` schema.
 
+KV-cache v2 (``paged=True``):
+
+* The dense ``(n_slots, max_len)`` cache is replaced by a block pool +
+  ``BlockAllocator`` (``repro.serving.kvcache``): admission is by *free
+  blocks* instead of free slots, HBM scales with tokens actually held, and
+  identical prompt prefixes share refcounted blocks.
+* Prefix-hit fast path: full prompt blocks found in the allocator's hash
+  registry are attached (no recompute); only the un-cached tail of the
+  prompt runs, riding the batched decode step.
+* Cold prompts dense-prefill their full-block prefix in one shot (padded to
+  a power-of-two bucket), scatter into fresh blocks, and register the block
+  hashes for future reuse; the sub-block tail rides decode so a later
+  prefix-hit replay is byte-identical to the cold run.
+* Preemption-on-exhaustion: when the pool runs dry mid-decode the
+  youngest/lowest-priority request is evicted back to the queue and later
+  resumes by re-prefilling prompt + generated-so-far (token-identical to an
+  uninterrupted run — greedy is exact argmax and sampling is seeded per
+  token index).
+* Dense mode stays the default compat path; paged is selected per engine.
+
 Deterministic and thread-free, like the rest of the serving layer.
 """
 from __future__ import annotations
@@ -37,8 +57,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.models import decode_step, init_cache, prefill
+from repro.models import decode_step, decode_step_paged, init_cache, prefill
 from repro.models.config import ModelConfig
+from repro.serving.engine import interpolated_percentile
+from repro.serving.kvcache import (PagedKVCache, hash_prompt_blocks,
+                                   paged_supported, pow2_bucket)
 from repro.serving.sampling import SamplingParams, sample
 
 #: every metrics() call returns exactly these keys (schema-stable for the
@@ -48,6 +71,13 @@ METRIC_KEYS = (
     "decode_steps", "generated_tokens", "prefill_tokens",
     "mean_ttft_s", "p50_ttft_s", "p90_ttft_s",
     "mean_latency_s", "throughput_tok_s",
+    # KV-cache v2 (zero for dense engines unless noted)
+    "preempted",                 # requests evicted back to the queue
+    "prefix_hit_tokens",         # prompt tokens served from cached blocks
+    "prefix_hit_rate",           # hit tokens / submitted prompt tokens
+    "prompt_tokens_computed",    # prompt tokens actually recomputed
+    "kv_blocks_peak",            # allocator high-water mark (paged)
+    "kv_hbm_bytes_per_req",      # peak cache HBM / n_slots (dense + paged)
 )
 
 
@@ -69,10 +99,28 @@ class GenRequest:
     on_token: Optional[Callable[["GenRequest", Any], None]] = None
     status: str = "queued"             # queued|rejected|prefill|decode|done
     n_consumed: int = 0                # prompt tokens already in the cache
+    # KV-cache v2 fields (paged engines)
+    prefix_hit: int = 0                # prompt tokens attached from cache
+    preemptions: int = 0
+    cache_pos: int = 0                 # next cache write position (host int)
+    _admit_tokens: Optional[jax.Array] = None   # resume feed (prompt + gen)
+    _resume_last: Any = None           # last generated token pre-preemption
+    _block_hashes: Optional[List[int]] = None   # feed hash chain (cached)
 
     @property
     def prompt_len(self) -> int:
         return self.tokens.shape[1]
+
+    @property
+    def feed_tokens(self) -> jax.Array:
+        """Tokens driving prefill / decode-tail: the original prompt, or
+        prompt + already-generated tokens after a preemption resume."""
+        return (self._admit_tokens if self._admit_tokens is not None
+                else self.tokens)
+
+    @property
+    def feed_len(self) -> int:
+        return self.feed_tokens.shape[1]
 
     @property
     def rejected(self) -> bool:
@@ -110,7 +158,10 @@ class ContinuousBatchingEngine:
     def __init__(self, model, cfg: Optional[ModelConfig] = None,
                  n_slots: int = 4, max_len: int = 512, *,
                  backend=None, prefill_chunk: int = 0,
-                 max_queue_depth: int = 0):
+                 max_queue_depth: int = 0,
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 kv_budget_bytes: Optional[int] = None):
         # local import: repro.api pulls the fleet stack which imports
         # serving — resolve lazily to stay acyclic (same as engine.py)
         from repro.api.backends import get_backend, use_backend
@@ -134,7 +185,7 @@ class ContinuousBatchingEngine:
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.max_queue_depth = max_queue_depth
-        self.cache = init_cache(cfg, n_slots, max_len)
+        self.paged = paged
         self.positions = jnp.zeros((n_slots,), jnp.int32)
         self.active: List[Optional[GenRequest]] = [None] * n_slots
         self.last_tokens = (jnp.zeros((n_slots, 1, cfg.n_codebooks), jnp.int32)
@@ -146,10 +197,40 @@ class ContinuousBatchingEngine:
         self.steps = 0
         self.rejected_total = 0
         self.prefill_tokens = 0        # prompt tokens processed by prefill
+        self.preempted_total = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens_computed = 0
+        self.prompt_tokens_submitted = 0
+        if paged:
+            why = paged_supported(cfg)
+            if why is not None:
+                raise ValueError(
+                    f"paged=True unsupported for {cfg.name}: {why} "
+                    "(use the dense compat path)")
+            max_blocks = -(-max_len // block_size)
+            if n_blocks is None:
+                if kv_budget_bytes is not None:
+                    from repro.serving.kvcache import blocks_for_budget
+
+                    # budget-sized pool, capped at full capacity (a huge
+                    # budget must not allocate pools past what n_slots *
+                    # max_len sequences could ever touch)
+                    n_blocks = min(blocks_for_budget(cfg, block_size,
+                                                     kv_budget_bytes),
+                                   n_slots * max_blocks + 1)
+                else:
+                    # full budget: every slot can hold a max-length sequence
+                    n_blocks = n_slots * max_blocks + 1
+            self.kv: Optional[PagedKVCache] = PagedKVCache(
+                cfg, n_slots, n_blocks, block_size, max_blocks)
+            self.cache = self.kv.pools          # alias: pools ARE the cache
+        else:
+            self.kv = None
+            self.cache = init_cache(cfg, n_slots, max_len)
         # jit entry points (shapes fixed by the slot pool), traced with this
         # engine's backend in scope so the kernel choice is baked in
-        def bind(fn):
-            jitted = jax.jit(fn)
+        def bind(fn, **jit_kw):
+            jitted = jax.jit(fn, **jit_kw)
 
             def call(*args):
                 with use_backend(self.backend):
@@ -159,6 +240,15 @@ class ContinuousBatchingEngine:
 
         self._decode = bind(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
         self._prefill = bind(lambda p, b: prefill(p, b, cfg, pad_to=max_len))
+        if paged:
+            self._decode_paged = bind(
+                lambda p, c, t, pos, tabs: decode_step_paged(p, c, t, pos,
+                                                             tabs, cfg))
+            # prefill padded to a power-of-two bucket: one compile per
+            # bucket instead of one per distinct prompt length
+            self._prefill_bucketed = bind(
+                lambda p, b, pad: prefill(p, b, cfg, pad_to=pad),
+                static_argnums=2)
 
     # ---------------------------------------------------------------- #
     @classmethod
@@ -190,6 +280,14 @@ class ContinuousBatchingEngine:
         self.steps = 0
         self.prefill_tokens = 0
         self.rejected_total = 0
+        self.preempted_total = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens_computed = 0
+        self.prompt_tokens_submitted = 0
+        if self.paged:
+            # drop the warmup request's registered blocks + allocator stats
+            # so measurement runs start truly cold
+            self.kv.reset()
 
     # ---------------------------------------------------------------- #
     def submit(self, tokens, max_new_tokens: int = 16,
@@ -211,6 +309,19 @@ class ContinuousBatchingEngine:
             req.status = "rejected"
             self.rejected_total += 1
             return req
+        if self.paged:
+            # memory-based admission: a request that could NEVER fit the
+            # pool (even alone, with every cached block evicted) is
+            # rejected up front rather than starving the queue
+            total = (self.cfg.n_frontend_tokens + req.prompt_len
+                     + max_new_tokens)
+            if (total > self.max_len
+                    or self.kv.blocks_for_tokens(total) + 1
+                    > self.kv.alloc.usable_blocks):
+                req.status = "rejected"
+                self.rejected_total += 1
+                return req
+        self.prompt_tokens_submitted += req.prompt_len
         heapq.heappush(self._pending, (-priority, req.rid, req))
         return req
 
@@ -220,34 +331,203 @@ class ContinuousBatchingEngine:
         for slot in range(self.n_slots):
             if self.active[slot] is not None or not self._pending:
                 continue
-            _, _, req = heapq.heappop(self._pending)
-            s = req.prompt_len
-            chunk = min(self.prefill_chunk, s) if self.prefill_chunk else s
-            batch = {"tokens": req.tokens[:, :chunk]}
+            if self.paged:
+                if not self._admit_paged(slot):
+                    break        # pool cannot take the head request yet
+            else:
+                _, _, req = heapq.heappop(self._pending)
+                self._admit_dense(slot, req)
+
+    def _admit_dense(self, slot: int, req: GenRequest) -> None:
+        s = req.prompt_len
+        chunk = min(self.prefill_chunk, s) if self.prefill_chunk else s
+        batch = {"tokens": req.tokens[:, :chunk]}
+        if req.frontend_embeds is not None:
+            # frontend embeds are prepended, so they ride the first chunk
+            batch["frontend_embeds"] = req.frontend_embeds
+        last, single_cache = self._prefill(self.params, batch)
+        self.cache = _tree_insert(self.cache, single_cache, slot)
+        self.positions = self.positions.at[slot].set(
+            chunk + self.cfg.n_frontend_tokens)
+        req.n_consumed = chunk
+        self.prefill_tokens += chunk
+        self.prompt_tokens_computed += chunk
+        self.active[slot] = req
+        if chunk == s:
+            # whole prompt in cache: prefill logits give the first token
+            nxt = sample(last[0, -1], req.sampling, 0)
+            req.status = "decode"
+            self._record(req, nxt)
+            self._set_last(slot, nxt)
+        else:
+            # chunked: feed the rest of the prompt through the batched
+            # decode step, one token per tick, alongside active decodes
+            req.status = "prefill"
+            self._set_last(slot, self._prompt_token(req, chunk))
+
+    def _admit_paged(self, slot: int) -> bool:
+        """Admission by free blocks (head of the priority queue only).
+
+        Prefix-hit fast path: full prompt blocks found in the allocator's
+        hash registry are attached with a refcount bump — no recompute —
+        and the remaining tail rides the batched decode step. Cold prompts
+        dense-prefill their full-block prefix (power-of-two padded) and
+        scatter it into fresh blocks, registering hashes for reuse; the
+        sub-block tail rides decode so hit and cold runs take the same
+        numeric path for the tail.
+
+        A *partial* hit whose uncached remainder is long (> 2 blocks) is
+        deliberately demoted to the cold path: prefill cannot attend to
+        cached blocks, so the remainder would otherwise crawl through
+        decode one token per tick AND its blocks would never be
+        registered. Recomputing the prefix once batch-prefills everything
+        and registers the longer chain, so the next such request hits
+        fully. Returns False (head stays queued) when the pool cannot
+        supply the blocks."""
+        kv = self.kv
+        bs = kv.block_size
+        nf = self.cfg.n_frontend_tokens
+        req = self._pending[0][2]
+        tokens = req.feed_tokens
+        s = tokens.shape[1]
+        hashing = req.frontend_embeds is None and nf == 0
+        n_hit = cached_hits = 0
+        hashes: List[int] = []
+        if hashing:
+            if req._block_hashes is None:      # one host sync per admission
+                req._block_hashes = hash_prompt_blocks(tokens[0].tolist(), bs)
+            hashes = req._block_hashes
+            # non-mutating probe: size the hit chain without touching
+            # refcounts, LRU order, or allocator stats — a failed admission
+            # must leave the allocator byte-identical
+            for h in hashes[:(s - 1) // bs]:   # always recompute >= 1 token
+                bid = kv.alloc.peek(h)
+                if bid is None:
+                    break
+                n_hit += 1
+                if kv.alloc.refcount(bid) == 0:
+                    cached_hits += 1           # revival consumes a cached slot
+            if n_hit and s - n_hit * bs > 2 * bs:
+                # partial hit with a long uncached remainder: demote to the
+                # cold path (one batched prefill + registration of the full
+                # chain) instead of crawling the remainder through decode
+                n_hit = cached_hits = 0
+        hit = n_hit * bs
+        if hit:
+            chunk = 0                          # tail rides decode from `hit`
+            cache_tokens = hit
+        else:
+            chunk = ((s - 1) // bs) * bs or s  # full-block prefix (or tiny)
+            cache_tokens = nf + chunk
+        needed = kv.blocks_for_tokens(cache_tokens) - n_hit
+        if kv.alloc.available() - cached_hits < needed + 1:  # +1: decode block
+            return False
+        heapq.heappop(self._pending)
+        for h in hashes[:n_hit]:
+            kv.attach(slot, kv.alloc.lookup(h))
+        req.prefix_hit += hit
+        self.prefix_hit_tokens += hit
+        if chunk:
+            batch = {"tokens": tokens[:, :chunk]}
             if req.frontend_embeds is not None:
-                # frontend embeds are prepended, so they ride the first chunk
                 batch["frontend_embeds"] = req.frontend_embeds
-            last, single_cache = self._prefill(self.params, batch)
-            self.cache = _tree_insert(self.cache, single_cache, slot)
-            self.positions = self.positions.at[slot].set(
-                chunk + self.cfg.n_frontend_tokens)
-            req.n_consumed = chunk
+            last, single_cache = self._prefill_bucketed(
+                self.params, batch, pow2_bucket(cache_tokens))
+            kv.scatter_prefill(slot, single_cache, cache_tokens)
+            if hashing:
+                for i in range(chunk // bs):
+                    kv.alloc.register(kv.slot_blocks[slot][i], hashes[i])
             self.prefill_tokens += chunk
-            self.active[slot] = req
-            if chunk == s:
-                # whole prompt in cache: prefill logits give the first token
+            # resume feeds append generated tokens; only the true prompt
+            # portion counts as prompt recompute
+            self.prompt_tokens_computed += min(chunk, req.prompt_len)
+        else:
+            last = None
+        self.positions = self.positions.at[slot].set(cache_tokens)
+        req.cache_pos = cache_tokens
+        req.n_consumed = hit or chunk
+        self.active[slot] = req
+        if req.n_consumed == s:
+            # whole feed in cache (tiny cold prompt): prefill logits give
+            # the next token — or the pre-preemption token on resume
+            if req._resume_last is not None:
+                self._set_last(slot, req._resume_last)
+                req._resume_last = None
+                req.status = "decode"
+            else:
                 nxt = sample(last[0, -1], req.sampling, 0)
                 req.status = "decode"
                 self._record(req, nxt)
                 self._set_last(slot, nxt)
+        else:
+            req.status = "prefill"
+            self._set_last(slot, self._prompt_token(req, req.n_consumed))
+        return True
+
+    # ---------------------------------------------------------------- #
+    def _pick_victim(self) -> Optional[int]:
+        """Slot to preempt under block exhaustion: lowest priority first,
+        youngest (highest rid) within a priority level."""
+        best, best_key = None, None
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            key = (req.priority, -req.rid)
+            if best_key is None or key < best_key:
+                best, best_key = slot, key
+        return best
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot`` back to the queue, freeing its blocks. On
+        re-admission it re-prefills prompt + generated-so-far and resumes
+        decoding from the pre-preemption token — token-identical to an
+        uninterrupted run (greedy is exact argmax; sampling is seeded per
+        token index)."""
+        req = self.active[slot]
+        gen = req.out_tokens or []
+        if gen:
+            if len(gen) > 1:
+                tail = jnp.asarray(gen[:-1], req.tokens.dtype)[None]
+                req._admit_tokens = jnp.concatenate([req.tokens, tail], axis=1)
             else:
-                # chunked: feed the rest of the prompt through the batched
-                # decode step, one token per tick, alongside active decodes
-                req.status = "prefill"
-                self._set_last(slot, self._prompt_token(req, chunk))
+                req._admit_tokens = req.tokens
+            req._resume_last = gen[-1]
+        else:
+            req._admit_tokens = None
+            req._resume_last = None
+        req._block_hashes = None               # feed changed: re-hash on admit
+        self.kv.release_slot(slot)
+        self.active[slot] = None
+        self.positions = self.positions.at[slot].set(0)
+        req.status = "queued"
+        req.n_consumed = 0
+        req.cache_pos = 0
+        req.preemptions += 1
+        self.preempted_total += 1
+        heapq.heappush(self._pending, (-req.priority, req.rid, req))
+
+    def _ensure_blocks(self) -> None:
+        """Grow every active slot's table to cover its next write position,
+        preempting victims when the pool is exhausted."""
+        kv = self.kv
+        bs = kv.block_size
+        for slot in range(self.n_slots):
+            req = self.active[slot]
+            if req is None:
+                continue
+            while req.cache_pos // bs >= len(kv.slot_blocks[slot]):
+                if kv.grow(slot):
+                    continue
+                victim = self._pick_victim()
+                if victim is None:      # unreachable: submit() guards size
+                    raise MemoryError("paged KV pool exhausted with no "
+                                      "preemptible request")
+                self._preempt(victim)
+                if victim == slot:
+                    break               # this slot itself was evicted
 
     def _prompt_token(self, req: GenRequest, i: int):
-        return req.tokens[0, i]
+        return req.feed_tokens[0, i]
 
     def _set_last(self, slot: int, token) -> None:
         self.last_tokens = self.last_tokens.at[slot].set(
@@ -269,10 +549,18 @@ class ContinuousBatchingEngine:
     def step(self) -> int:
         """Admit -> one batched decode step -> harvest. Returns #occupied."""
         self._admit()
+        if self.paged:
+            self._ensure_blocks()                # may preempt under pressure
         if not any(r is not None for r in self.active):
             return 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self.last_tokens, self.positions)
+        if self.paged:
+            logits, self.kv.pools = self._decode_paged(
+                self.params, self.kv.pools, self.last_tokens,
+                self.positions, self.kv.tables)
+            self.cache = self.kv.pools
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              self.last_tokens, self.positions)
         self.positions = self.positions + 1
         last = logits[:, -1]                     # [B, V] or [B, K, V]
         # one batched argmax serves every greedy slot (the common case);
@@ -285,14 +573,26 @@ class ContinuousBatchingEngine:
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            if req.n_consumed < req.prompt_len:
-                # this tick consumed one prompt token (chunked prefill tail)
+            req.cache_pos += 1                   # host mirror of positions
+            if req.n_consumed < req.feed_len:
+                # this tick consumed one feed token (chunked-prefill tail,
+                # prefix-hit tail, or preemption-resume replay)
                 req.n_consumed += 1
-                if req.n_consumed < req.prompt_len:
+                if req.n_consumed <= req.prompt_len:
+                    # replayed generated tokens (resume) are not prompt work
+                    self.prompt_tokens_computed += 1
+                if req.n_consumed < req.feed_len:
                     self._set_last(slot, self._prompt_token(req, req.n_consumed))
                     n_occupied += 1
                     continue
-                req.status = "decode"   # logits now predict the first token
+                req.status = "decode"   # logits now predict the next token
+                if req._resume_last is not None:
+                    # resume: the "next token" was already generated before
+                    # the preemption — feed it, don't re-record it
+                    self._set_last(slot, req._resume_last)
+                    req._resume_last = None
+                    n_occupied += 1
+                    continue
             nxt = (greedy[slot] if req.sampling.is_greedy
                    else sample(last[slot], req.sampling, len(req.out_tokens)))
             self._record(req, nxt)
@@ -300,6 +600,8 @@ class ContinuousBatchingEngine:
             if req.done:
                 self.active[slot] = None         # slot frees mid-flight
                 self.positions = self.positions.at[slot].set(0)
+                if self.paged:                   # refcounts drop on EOS/done
+                    self.kv.release_slot(slot)
             else:
                 n_occupied += 1
         return n_occupied
@@ -330,18 +632,34 @@ class ContinuousBatchingEngine:
             decode_steps=self.steps,
             generated_tokens=sum(len(r.out_tokens or []) for r in reqs),
             prefill_tokens=self.prefill_tokens,
+            preempted=self.preempted_total,
+            prefix_hit_tokens=self.prefix_hit_tokens,
+            prompt_tokens_computed=self.prompt_tokens_computed,
+            prefix_hit_rate=(self.prefix_hit_tokens
+                             / self.prompt_tokens_submitted
+                             if self.prompt_tokens_submitted else 0.0),
+            kv_blocks_peak=(self.kv.alloc.stats.peak_in_use
+                            if self.paged else 0),
         )
         if not done:
             return m
-        ttft = sorted(r.first_token_at - r.submitted_at for r in done)
+        # peak cache HBM per concurrent request: dense reserves the whole
+        # (n_slots, max_len) cache up front; paged holds only the blocks
+        # actually touched (high-water mark), shared prefixes counted once
+        if self.paged:
+            kv_bytes = self.kv.kv_bytes_in_use(self.kv.alloc.stats.peak_in_use)
+        else:
+            kv_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
+        m["kv_hbm_bytes_per_req"] = kv_bytes / self.n_slots
+        ttft = [r.first_token_at - r.submitted_at for r in done]
         total = [r.finished_at - r.submitted_at for r in done]
         toks = sum(len(r.out_tokens) for r in done)
         wall = max(r.finished_at for r in done) - min(r.submitted_at
                                                       for r in done)
         m.update(
             mean_ttft_s=sum(ttft) / len(ttft),
-            p50_ttft_s=ttft[len(ttft) // 2],
-            p90_ttft_s=ttft[min(9 * len(ttft) // 10, len(ttft) - 1)],
+            p50_ttft_s=interpolated_percentile(ttft, 0.5),
+            p90_ttft_s=interpolated_percentile(ttft, 0.9),
             mean_latency_s=sum(total) / len(total),
             throughput_tok_s=toks / max(wall, 1e-9),
         )

@@ -50,6 +50,9 @@ def test_flatten_numeric_paths():
     ("mean_ttft_s", 1.0, 1.25, True),         # +25% TTFT: gate
     ("mean_ttft_s", 1.0, 1.1, False),
     ("mean_ttft_s", 1.0, 0.5, False),
+    ("kv_hbm_bytes_per_req", 1000.0, 1300.0, True),   # +30% KV HBM: gate
+    ("kv_hbm_bytes_per_req", 1000.0, 1100.0, False),
+    ("kv_hbm_bytes_per_req", 1000.0, 400.0, False),   # shrinking is fine
 ])
 def test_compare_gating(metric, old, new, fails):
     cb = _load_compare_bench()

@@ -7,6 +7,7 @@ from conftest import make_batch
 from repro import configs as C
 from repro.models import forward, init_params
 from repro.serving import InferenceSession, Pipeline, RequestQueue
+from repro.serving.engine import InferenceStats, interpolated_percentile
 
 
 def _session():
@@ -43,6 +44,55 @@ def test_generate_greedy_matches_forward_argmax():
     expect = jnp.argmax(logits[:, -1], -1)
     out = session.generate(batch, n_new=1)
     np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(expect))
+
+
+def test_percentile_interpolates_like_numpy():
+    """Regression for the nearest-rank bias: ``int(len(xs) * p)`` indexed
+    past the true rank on small samples (p50 of [1, 2] returned 2)."""
+    for xs in ([1.0, 2.0], [5.0, 1.0, 3.0], [1.0], list(range(10))):
+        for p in (0.1, 0.5, 0.9, 0.99):
+            want = float(np.percentile(xs, p * 100))
+            assert abs(interpolated_percentile(xs, p) - want) < 1e-9, (xs, p)
+    assert interpolated_percentile([], 0.5) == 0.0
+    stats = InferenceStats()
+    stats.record(1.0)
+    stats.record(2.0)
+    assert stats.percentile_ms(0.5) == 1.5     # was 2.0 pre-fix
+    # percentile_ms sorts internally: recording order must not matter
+    s2 = InferenceStats()
+    s2.record(2.0)
+    s2.record(1.0)
+    assert s2.percentile_ms(0.5) == 1.5
+
+
+def test_generate_prefill_pads_to_pow2_bucket():
+    """generate() must trace one prefill shape per power-of-two bucket,
+    not one per prompt length (recompile churn on heterogeneous prompts),
+    while leaving outputs identical."""
+    cfg, session = _session()
+    shapes = []
+    orig = session._prefill_bucketed
+
+    def spy(p, b, pad):
+        shapes.append((b["tokens"].shape[1], pad))
+        return orig(p, b, pad)
+
+    session._prefill_bucketed = spy
+    key = jax.random.PRNGKey(0)
+    for s in (5, 6, 9, 11):
+        session.generate(
+            {"tokens": jax.random.randint(jax.random.fold_in(key, s),
+                                          (1, s), 0, cfg.vocab_size)},
+            n_new=2)
+    pads = {pad for _, pad in shapes}
+    assert pads == {16}                        # all four lengths share one
+    assert all((s + 2) <= pad for s, pad in shapes)
+    # and the padded prefill changes nothing semantically
+    batch = make_batch(cfg, b=1, s=12)
+    logits, _ = forward(session.params, batch, cfg)
+    out = session.generate(batch, n_new=1)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]),
+                                  np.asarray(jnp.argmax(logits[:, -1], -1)))
 
 
 def test_session_stats_recorded():
