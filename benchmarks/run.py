@@ -58,7 +58,8 @@ def main() -> None:
     if args.json:
         #: payload sections that carry *metrics* (flattened + gated by
         #: scripts/compare_bench.py); everything else is run config
-        result_keys = ("variants", "rollout", "shared_prefix", "kv_pressure")
+        result_keys = ("variants", "rollout", "shared_prefix", "kv_pressure",
+                       "spec_decode")
         for bench, payload in (("quant", quant_payload),
                                ("serving", serving_payload),
                                ("fleet", fleet_payload)):

@@ -19,6 +19,13 @@ inspection prompt) through three engines:
 emitting ``kv_hbm_bytes_per_req`` (gated: lower is better),
 ``prefix_hit_rate``, ``prefill_token_reduction`` and throughput at the
 fixed block budget.
+
+Speculative decoding (serving v3): a ``spec_decode`` section serves the
+same greedy workload through the baseline fp32 engine and a spec engine
+(fp32 target + ``int8_dynamic`` draft, ``SpecConfig(k=SPEC_K)``), asserts
+bit-identical outputs, and reports ``acceptance_rate`` and
+``accepted_tokens_per_step`` (both gated: higher is better) plus the
+decode-step reduction.
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ import jax.numpy as jnp
 from repro import configs as C
 from repro.api import ModelArtifact, VariantSpec
 from repro.models import init_params
-from repro.serving import ArrivalTrace, ContinuousBatchingEngine, replay
+from repro.serving import (ArrivalTrace, ContinuousBatchingEngine,
+                           SpecConfig, replay)
 
 ARCH = "mistral-nemo-12b"
 BACKEND = "ref"            # per-engine kernel backend (TPU: "pallas-tpu")
@@ -130,6 +138,65 @@ def run_shared_prefix(cfg, artifact, fast: bool) -> Tuple[List[str],
     return lines, results
 
 
+SPEC_K = 3                 # draft tokens per verify step
+
+
+def run_spec_decode(cfg, variants, fast: bool) -> Tuple[List[str],
+                                                        Dict[str, Any]]:
+    """fp32 target + int8_dynamic draft vs the PR-2 baseline engine on one
+    greedy workload. Greedy spec output is bit-identical to the baseline
+    (asserted), so the section reports *deterministic* speed counters:
+    acceptance_rate and accepted_tokens_per_step (both gated, higher is
+    better) plus the decode-step reduction; wall-clock tok/s for both
+    engines is exported under non-gated names (short-run noise)."""
+    max_new = 8 if fast else 12
+    n = 6 if fast else 10
+    key = jax.random.PRNGKey(23)
+    prompts = []
+    for i in range(n):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        slen = int(jax.random.randint(k1, (), 4, 17))
+        prompts.append(jax.random.randint(k2, (1, slen), 0, cfg.vocab_size))
+
+    def serve(engine):
+        engine.warmup()
+        reqs = [engine.submit(p, max_new_tokens=max_new) for p in prompts]
+        engine.run()
+        assert all(r.done for r in reqs), "spec workload did not finish"
+        return [r.out_tokens for r in reqs], engine.metrics(reqs)
+
+    baseline = ContinuousBatchingEngine(
+        variants["fp32"], n_slots=N_SLOTS, max_len=MAX_LEN, backend=BACKEND)
+    spec = ContinuousBatchingEngine(
+        variants["fp32"], n_slots=N_SLOTS, max_len=MAX_LEN, backend=BACKEND,
+        spec=SpecConfig(draft=variants["int8_dynamic"], k=SPEC_K))
+    base_out, base_m = serve(baseline)
+    spec_out, spec_m = serve(spec)
+    assert spec_out == base_out, (
+        "greedy speculative output diverged from the baseline engine")
+    results = {
+        "k": SPEC_K,
+        "acceptance_rate": spec_m["acceptance_rate"],
+        "accepted_tokens_per_step": spec_m["accepted_tokens_per_step"],
+        "spec_events": spec_m["spec_events"],
+        "decode_steps": spec_m["decode_steps"],
+        "baseline_decode_steps": base_m["decode_steps"],
+        "step_reduction": 1.0 - (spec_m["decode_steps"]
+                                 / max(base_m["decode_steps"], 1)),
+        "decode_tok_s": spec_m["throughput_tok_s"],
+        "baseline_decode_tok_s": base_m["throughput_tok_s"],
+    }
+    lines = [
+        f"serving_spec_acceptance_rate,{results['acceptance_rate']:.3f},"
+        f"accepted_tokens_per_step="
+        f"{results['accepted_tokens_per_step']:.2f} k={SPEC_K}",
+        f"serving_spec_decode_steps,{results['decode_steps']},"
+        f"baseline={results['baseline_decode_steps']} "
+        f"reduction={results['step_reduction']:.1%}",
+    ]
+    return lines, results
+
+
 def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -159,6 +226,8 @@ def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     prefix_lines, prefix_results = run_shared_prefix(cfg, variants["fp32"],
                                                      fast)
     lines.extend(prefix_lines)
+    spec_lines, spec_results = run_spec_decode(cfg, variants, fast)
+    lines.extend(spec_lines)
     payload = {
         "arch": ARCH,
         "backend": BACKEND,
@@ -173,5 +242,6 @@ def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
             "small_pool_blocks": SMALL_POOL_BLOCKS,
             **prefix_results,
         },
+        "spec_decode": spec_results,
     }
     return lines, payload

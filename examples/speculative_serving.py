@@ -1,0 +1,103 @@
+"""Speculative decoding: fp32 target + int8 draft (serving v3).
+
+The paper's result: signed-int8 quantization cuts edge inference time
+substantially at a small accuracy cost. Speculative decoding removes the
+accuracy cost from the equation — serve the cheap int8 variant as a
+*draft* that proposes k tokens per step, and let the fp32 target verify
+all k+1 positions in one multi-token forward:
+
+  1. publish fp32 + int8_dynamic variants through ``repro.api``, with the
+     int8 variant declared ``draft_of="fp32"``;
+  2. resolve the pair into a ``SpecConfig`` via ``Deployment.spec_config``
+     and serve it with ``ContinuousBatchingEngine(..., spec=...)``,
+     dense and paged;
+  3. assert greedy speculative output is BIT-IDENTICAL to the baseline
+     ``InferenceSession.generate`` of the fp32 target — int8-class decode
+     steps, fp32 sampling semantics.
+
+    PYTHONPATH=src python examples/speculative_serving.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+
+from repro import configs as C
+from repro.api import ArtifactRegistry, Deployment, ModelArtifact, VariantSpec
+from repro.models import init_params
+from repro.serving import ContinuousBatchingEngine
+
+ARCH = "mistral-nemo-12b"
+SPEC_K = 3
+
+
+def build_prompts(cfg, n, seed=23):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        slen = int(jax.random.randint(k1, (), 4, 17))
+        out.append(jax.random.randint(k2, (1, slen), 0, cfg.vocab_size))
+    return out
+
+
+def serve(engine, prompts, max_new):
+    reqs = [engine.submit(p, max_new_tokens=max_new) for p in prompts]
+    engine.run()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], engine.metrics(reqs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    n = 6 if args.fast else 10
+    max_new = 8 if args.fast else 12
+
+    cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = build_prompts(cfg, n)
+
+    # publish the draft/target pair declaratively through repro.api
+    with tempfile.TemporaryDirectory() as root:
+        registry = ArtifactRegistry(root)
+        dep = Deployment(registry, model="vqi-spec")
+        model = ModelArtifact.create("vqi-spec", "v1", params, cfg)
+        published = dep.publish(model, specs=[
+            VariantSpec.fp32(),
+            VariantSpec.dynamic_int8(draft_of="fp32"),
+        ])
+        spec = dep.spec_config(target_variant="fp32", k=SPEC_K)
+        target = published["fp32"]
+
+        # baseline: the target's own sequential generate
+        session = target.session(backend="ref")
+        expected = [session.generate({"tokens": p}, n_new=max_new)[0].tolist()
+                    for p in prompts]
+
+        print(f"== {n} greedy requests, fp32 target + int8 draft, "
+              f"k={SPEC_K} ==")
+        for label, kw in (("dense", {}),
+                          ("paged", {"paged": True, "block_size": 16})):
+            engine = ContinuousBatchingEngine(
+                target, n_slots=4, max_len=96, backend="ref", spec=spec, **kw)
+            out, m = serve(engine, prompts, max_new)
+            assert out == expected, (
+                f"{label} speculative output diverged from the fp32 "
+                "baseline generate — greedy spec must be bit-identical")
+            print(f"{label:5s}: acceptance_rate {m['acceptance_rate']:.2f}  "
+                  f"accepted_tokens_per_step "
+                  f"{m['accepted_tokens_per_step']:.2f}  "
+                  f"decode_steps {m['decode_steps']:.0f} "
+                  f"(sequential equiv {n * max_new})")
+            assert m["accepted_tokens_per_step"] > 1.0, (
+                "speculation should commit more than one token per verify")
+        print("OK — greedy parity verified, int8-draft speculation "
+              "accepted >1 token per target step")
+
+
+if __name__ == "__main__":
+    main()

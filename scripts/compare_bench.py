@@ -8,11 +8,13 @@ Walks both reports (benchmarks/report.py schema), pairs every numeric metric
 that exists at the same path in both, and fails (exit 1) when a *gated*
 metric regresses by more than ``--threshold`` (default 20%):
 
-    throughput_tok_s        lower is worse   (serving)
-    mean_ttft_s             higher is worse  (serving)
-    kv_hbm_bytes_per_req    higher is worse  (serving, KV-cache v2)
-    rollout_convergence_s   higher is worse  (fleet)
-    fleet_p99_latency_ms    higher is worse  (fleet)
+    throughput_tok_s            lower is worse   (serving)
+    mean_ttft_s                 higher is worse  (serving)
+    kv_hbm_bytes_per_req        higher is worse  (serving, KV-cache v2)
+    acceptance_rate             lower is worse   (serving, spec decode)
+    accepted_tokens_per_step    lower is worse   (serving, spec decode)
+    rollout_convergence_s       higher is worse  (fleet)
+    fleet_p99_latency_ms        higher is worse  (fleet)
 
 All other shared metrics are printed as informational deltas. Deliberately
 dependency-free and repo-import-free so CI can run it against a downloaded
@@ -28,6 +30,7 @@ from typing import Dict
 #: metric leaf name -> direction ("higher"/"lower" = which way is better)
 GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower",
          "kv_hbm_bytes_per_req": "lower",
+         "acceptance_rate": "higher", "accepted_tokens_per_step": "higher",
          "rollout_convergence_s": "lower", "fleet_p99_latency_ms": "lower"}
 
 

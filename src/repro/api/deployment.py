@@ -108,6 +108,26 @@ class Deployment:
                                          self._resolve_version(version),
                                          validate, policy)
 
+    def spec_config(self, version: Optional[str] = None, *,
+                    target_variant: str = "fp32", k: int = 4,
+                    draft_backend=None):
+        """Resolve this model version's draft/target pair (declared via
+        ``VariantSpec(draft_of=...)`` at publish time) into a serving
+        ``SpecConfig``: the returned object plugs straight into
+        ``ContinuousBatchingEngine(target_artifact, spec=...)`` so a
+        rollout can serve the fp32 target with int8-class decode speed."""
+        from repro.serving.spec_decode import SpecConfig
+
+        version = self._resolve_version(version)
+        ref = self.registry.draft_for(self.model, version, target_variant)
+        if ref is None:
+            raise KeyError(
+                f"no draft variant published for {self.model}:{version} "
+                f"target {target_variant!r} — publish one with "
+                "VariantSpec(..., draft_of=target)")
+        return SpecConfig(draft=self.registry.fetch_artifact(ref), k=k,
+                          draft_backend=draft_backend)
+
     def _resolve_version(self, version: Optional[str]) -> str:
         if version is not None:
             return version

@@ -123,9 +123,27 @@ class ArtifactRegistry:
             vparams, _info = spec.build(model.params, model.config,
                                         calib_data=calib_data)
             metrics = evaluate(vparams, model.config) if evaluate else {}
-            out[spec.variant] = self.publish_artifact(
+            artifact = self.publish_artifact(
                 model.with_variant(spec.variant, vparams, metrics))
+            if getattr(spec, "draft_of", None):
+                # record the speculative-decoding draft relation so
+                # Deployment.spec_config can pair draft/target later
+                self._index[artifact.ref.key]["draft_of"] = spec.draft_of
+                self._save_index()
+            out[spec.variant] = artifact
         return out
+
+    def draft_for(self, name: str, version: str,
+                  target_variant: str = "fp32") -> Optional[ArtifactRef]:
+        """The variant published with ``draft_of == target_variant`` for
+        this model version (its speculative-decoding draft), or None."""
+        for key, entry in self._index.items():
+            n, v, variant = key.split(":")
+            if (n == name and v == version
+                    and entry.get("draft_of") == target_variant):
+                return ArtifactRef(name, version, variant,
+                                   entry["sha256"], entry["size_bytes"])
+        return None
 
     def fetch_artifact(self, ref: ArtifactRef):
         """Integrity-checked load as a ``ModelArtifact``."""

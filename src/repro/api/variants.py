@@ -46,10 +46,17 @@ class QuantRecipe:
 
 @dataclasses.dataclass(frozen=True)
 class VariantSpec:
-    """One artifact variant: its published label + the recipe producing it."""
+    """One artifact variant: its published label + the recipe producing it.
+
+    ``draft_of`` declares a speculative-decoding relation: this variant
+    serves as the *draft* model for the named target variant (e.g. the
+    registry's ``int8_dynamic`` drafting for ``fp32``). The relation is
+    recorded in the registry index at publish time so ``Deployment`` can
+    resolve draft/target pairs into a serving ``SpecConfig``."""
     variant: str
     recipe: Optional[QuantRecipe] = None     # None -> params pass through
     calib_batches: int = 0                   # cap on calib_data (0 = all)
+    draft_of: Optional[str] = None           # target variant this one drafts
 
     # ---------------- declarative constructors (paper §5's three bars) --- #
     @classmethod
@@ -57,25 +64,28 @@ class VariantSpec:
         return cls("fp32", None)
 
     @classmethod
-    def dynamic_int8(cls, min_size: int = 1024, **kw) -> "VariantSpec":
+    def dynamic_int8(cls, min_size: int = 1024,
+                     draft_of: Optional[str] = None, **kw) -> "VariantSpec":
         return cls("dynamic_int8",
-                   QuantRecipe(mode="dynamic_int8", min_size=min_size, **kw))
+                   QuantRecipe(mode="dynamic_int8", min_size=min_size, **kw),
+                   draft_of=draft_of)
 
     @classmethod
     def static_int8(cls, calib_batches: int = 4, min_size: int = 1024,
-                    **kw) -> "VariantSpec":
+                    draft_of: Optional[str] = None, **kw) -> "VariantSpec":
         return cls("static_int8",
                    QuantRecipe(mode="static_int8", min_size=min_size, **kw),
-                   calib_batches=calib_batches)
+                   calib_batches=calib_batches, draft_of=draft_of)
 
     @classmethod
     def int4(cls, group_size: int = 64, min_size: int = 1024,
-             **kw) -> "VariantSpec":
+             draft_of: Optional[str] = None, **kw) -> "VariantSpec":
         """Weight-only int4 (the paper's "advanced quantization" future work)."""
         return cls("int4",
                    QuantRecipe(mode="dynamic_int8", bits=4,
                                granularity="per_group", group_size=group_size,
-                               min_size=min_size, **kw))
+                               min_size=min_size, **kw),
+                   draft_of=draft_of)
 
     # --------------------------------------------------------------------- #
     def build(self, params, cfg: ModelConfig,

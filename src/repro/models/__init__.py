@@ -6,6 +6,8 @@ from repro.models.transformer import (
     init_cache,
     init_params,
     prefill,
+    verify_step,
+    verify_step_paged,
 )
 
 __all__ = [
@@ -16,4 +18,6 @@ __all__ = [
     "decode_step_paged",
     "init_cache",
     "init_params",
+    "verify_step",
+    "verify_step_paged",
 ]

@@ -278,6 +278,182 @@ def gqa_decode(p, x, cache_kv, pos, cfg: ModelConfig, window: int = 0):
 
 
 # ----------------------------------------------------------------------- #
+# Multi-token verify (speculative decoding)
+# ----------------------------------------------------------------------- #
+def _verify_positions(pos, b: int, m: int):
+    """pos (scalar or [B]) -> (pos_vec [B], positions [B, M]) for a verify
+    span of M candidate tokens starting at each sequence's position."""
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    return pos_vec, pos_vec[:, None] + jnp.arange(m, dtype=jnp.int32)[None]
+
+
+def gqa_verify(p, x, cache_kv, pos, cfg: ModelConfig):
+    """Score M candidate tokens in one pass against a dense cache.
+
+    x [B,M,d]; pos: scalar or [B] — the cache position of x[:, 0]. Writes
+    all M tokens' K/V at pos..pos+M-1 and attends each query i against the
+    cache prefix through pos+i (triangular within the span). Rejected-tail
+    writes are left stale: future attention masks by position and the next
+    verify/decode overwrites them, so rollback is pure position bookkeeping.
+    Full attention only (the spec-decode gate excludes sliding windows)."""
+    b, m, _ = x.shape
+    hd = cfg.resolved_head_dim
+    int8_kv = cfg.kv_cache_int8
+    if int8_kv:
+        k_cache, k_scale, v_cache, v_scale = cache_kv
+    else:
+        k_cache, v_cache = cache_kv
+    s_cache = k_cache.shape[1]
+    pos_vec, positions = _verify_positions(pos, b, m)
+    q = linear(p["wq"], x).reshape(b, m, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, m, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, m, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if int8_kv:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = _batched_update(k_cache, kq, pos_vec)
+        v_cache = _batched_update(v_cache, vq, pos_vec)
+        k_scale = _batched_update(k_scale, ks, pos_vec)
+        v_scale = _batched_update(v_scale, vs, pos_vec)
+        new_cache = (k_cache, k_scale, v_cache, v_scale)
+        kf = k_cache.astype(jnp.float32) * k_scale[..., None]
+        vf = v_cache.astype(jnp.float32) * v_scale[..., None]
+    else:
+        k_cache = _batched_update(k_cache, k.astype(k_cache.dtype), pos_vec)
+        v_cache = _batched_update(v_cache, v.astype(v_cache.dtype), pos_vec)
+        new_cache = (k_cache, v_cache)
+        kf, vf = k_cache, v_cache
+    valid = jnp.arange(s_cache)[None, None, :] <= positions[:, :, None]
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    qg = q.reshape(b, m, hkv, hq // hkv, hd)
+    scores = _score_einsum("bmkgh,btkh->bkgmt", qg, kf, cfg.opt_attn_accum)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vf.dtype)
+    out = jnp.einsum("bkgmt,btkh->bmkgh", probs, vf)
+    out = out.astype(x.dtype).reshape(b, m, hq * hd)
+    return linear(p["wo"], out), new_cache
+
+
+def paged_verify_slots(tables, positions, block_size: int):
+    """(block ids [B,M], offsets [B,M]) for writing M consecutive positions
+    per sequence; unallocated entries clamp to the trash block."""
+    blk = jnp.take_along_axis(tables, positions // block_size, axis=1)
+    return jnp.maximum(blk, 0), positions % block_size
+
+
+def gqa_verify_paged(p, x, cache, pos, tables, cfg: ModelConfig):
+    """Paged counterpart of ``gqa_verify``: M tokens' K/V scatter into the
+    slots' (private) tail blocks, then the whole sequence is gathered
+    through the block table and attended with the triangular span mask.
+    The scheduler frees blocks that only held rejected tokens afterwards
+    (``PagedKVCache.truncate``)."""
+    b, m, _ = x.shape
+    hd = cfg.resolved_head_dim
+    int8_kv = cfg.kv_cache_int8
+    if int8_kv:
+        k_pool, k_scale, v_pool, v_scale = cache
+    else:
+        k_pool, v_pool = cache
+    block_size = k_pool.shape[1]
+    pos_vec, positions = _verify_positions(pos, b, m)
+    q = linear(p["wq"], x).reshape(b, m, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, m, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, m, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    blk, off = paged_verify_slots(tables, positions, block_size)
+    if int8_kv:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_pool = k_pool.at[blk, off].set(kq)
+        v_pool = v_pool.at[blk, off].set(vq)
+        k_scale = k_scale.at[blk, off].set(ks)
+        v_scale = v_scale.at[blk, off].set(vs)
+        new_cache = (k_pool, k_scale, v_pool, v_scale)
+        kf = (paged_gather(k_pool, tables).astype(jnp.float32)
+              * paged_gather(k_scale, tables)[..., None])
+        vf = (paged_gather(v_pool, tables).astype(jnp.float32)
+              * paged_gather(v_scale, tables)[..., None])
+    else:
+        k_pool = k_pool.at[blk, off].set(k.astype(k_pool.dtype))
+        v_pool = v_pool.at[blk, off].set(v.astype(v_pool.dtype))
+        new_cache = (k_pool, v_pool)
+        kf = paged_gather(k_pool, tables)
+        vf = paged_gather(v_pool, tables)
+    t = kf.shape[1]
+    allocated = jnp.repeat(tables >= 0, block_size, axis=1)     # [B, T]
+    valid = ((jnp.arange(t)[None, None, :] <= positions[:, :, None])
+             & allocated[:, None, :])
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    qg = q.reshape(b, m, hkv, hq // hkv, hd)
+    scores = _score_einsum("bmkgh,btkh->bkgmt", qg, kf, cfg.opt_attn_accum)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vf.dtype)
+    out = jnp.einsum("bkgmt,btkh->bmkgh", probs, vf)
+    out = out.astype(x.dtype).reshape(b, m, hq * hd)
+    return linear(p["wo"], out), new_cache
+
+
+def _mla_attend_verify(p, x, c_kv, k_rope, positions, k_pos, valid,
+                       cfg: ModelConfig):
+    """Naive MLA attention over M verify queries: mirrors
+    ``_mla_attend_naive`` with a query axis (kept separate so the
+    single-query decode path stays numerically untouched).
+    valid: [B, M, S]."""
+    b, m = x.shape[:2]
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope, positions, k_pos, cfg)
+    hd = q.shape[-1]
+    scores = _score_einsum("bqnh,btnh->bnqt", q, k, cfg.opt_attn_accum)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnqt,btnh->bqnh", probs, v)
+    return out.reshape(b, m, cfg.n_heads * cfg.v_head_dim)
+
+
+def mla_verify(p, x, cache, pos, cfg: ModelConfig):
+    """Dense MLA verify: write M compressed-stream entries, attend each
+    query against its causal prefix (naive up-projecting core)."""
+    b, m, _ = x.shape
+    c_kv, k_rope = cache
+    s_cache = c_kv.shape[1]
+    pos_vec, positions = _verify_positions(pos, b, m)
+    c_kv = _batched_update(c_kv, linear(p["w_dkv"], x), pos_vec)
+    k_rope = _batched_update(k_rope, linear(p["w_kr"], x), pos_vec)
+    k_pos = jnp.broadcast_to(jnp.arange(s_cache)[None], (b, s_cache))
+    valid = k_pos[:, None, :] <= positions[:, :, None]
+    out = _mla_attend_verify(p, x, c_kv, k_rope, positions, k_pos, valid, cfg)
+    return linear(p["wo"], out), (c_kv, k_rope)
+
+
+def mla_verify_paged(p, x, cache, pos, tables, cfg: ModelConfig):
+    """Paged MLA verify: scatter M compressed entries through the block
+    table, gather the contiguous view, run the verify attention core."""
+    b, m, _ = x.shape
+    c_pool, r_pool = cache
+    block_size = c_pool.shape[1]
+    pos_vec, positions = _verify_positions(pos, b, m)
+    blk, off = paged_verify_slots(tables, positions, block_size)
+    c_pool = c_pool.at[blk, off].set(linear(p["w_dkv"], x)
+                                     .astype(c_pool.dtype))
+    r_pool = r_pool.at[blk, off].set(linear(p["w_kr"], x)
+                                     .astype(r_pool.dtype))
+    c_kv = paged_gather(c_pool, tables)
+    k_rope = paged_gather(r_pool, tables)
+    t = c_kv.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    allocated = jnp.repeat(tables >= 0, block_size, axis=1)
+    valid = ((k_pos[:, None, :] <= positions[:, :, None])
+             & allocated[:, None, :])
+    out = _mla_attend_verify(p, x, c_kv, k_rope, positions, k_pos, valid, cfg)
+    return linear(p["wo"], out), (c_pool, r_pool)
+
+
+# ----------------------------------------------------------------------- #
 # Paged decode (block-table cache, KV-cache v2)
 # ----------------------------------------------------------------------- #
 def paged_write_slots(tables, pos_vec, block_size: int):

@@ -143,7 +143,18 @@ def _apply_attn_block(lp, x, cfg: ModelConfig, *, moe: bool, mode: str,
                       tables=None):
     window = _attn_window(cfg)
     h = rms_norm(lp["ln1"], x, cfg.norm_eps)
-    if mode == "decode" and tables is not None:
+    if mode == "verify":
+        # speculative decoding: score k+1 candidate positions in one pass
+        # (full attention only — the spec gate excludes sliding windows)
+        if tables is not None:
+            verify = (attn.mla_verify_paged if cfg.attention == "mla"
+                      else attn.gqa_verify_paged)
+            a_out, new_cache = verify(lp["attn"], h, cache, pos, tables, cfg)
+        else:
+            verify = (attn.mla_verify if cfg.attention == "mla"
+                      else attn.gqa_verify)
+            a_out, new_cache = verify(lp["attn"], h, cache, pos, cfg)
+    elif mode == "decode" and tables is not None:
         # paged decode: pooled cache leaves read through block tables
         if cfg.attention == "mla":
             a_out, new_cache = attn.mla_decode_paged(lp["attn"], h, cache,
@@ -372,6 +383,34 @@ def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
     """tokens [B,1] (or [B,1,K]); pos: scalar int32 position of this token."""
     x = embed_inputs(params, {"tokens": tokens}, cfg)
     x, caches, _ = _backbone(params, x, cfg, mode="decode", caches=caches, pos=pos)
+    return lm_head(params, x, cfg), caches
+
+
+def verify_step(params, caches, tokens, pos, cfg: ModelConfig):
+    """Multi-token verify forward (speculative decoding): score M candidate
+    tokens in ONE pass against a dense decode cache.
+
+    tokens [B, M]; pos: scalar or per-sequence [B] — cache position of
+    tokens[:, 0]. Returns (logits [B, M, V], caches): logits[:, i] is the
+    next-token distribution after the prefix extended by tokens[:, :i+1],
+    exactly what M sequential ``decode_step`` calls would produce. All M
+    tokens' K/V are written; callers roll back rejected tails by position
+    bookkeeping only (stale entries are masked and later overwritten).
+    Attention-only stacks (GQA/MLA, window == 0, single codebook)."""
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    x, caches, _ = _backbone(params, x, cfg, mode="verify", caches=caches,
+                             pos=pos)
+    return lm_head(params, x, cfg), caches
+
+
+def verify_step_paged(params, caches, tokens, pos, tables, cfg: ModelConfig):
+    """Paged-cache verify (speculative decoding over KV-cache v2): same
+    contract as ``verify_step`` with pooled block leaves and per-sequence
+    block tables; the scheduler truncates tail blocks holding only rejected
+    tokens through ``PagedKVCache.truncate``."""
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    x, caches, _ = _backbone(params, x, cfg, mode="verify", caches=caches,
+                             pos=pos, tables=tables)
     return lm_head(params, x, cfg), caches
 
 

@@ -5,4 +5,5 @@ from repro.serving.kvcache import (BlockAllocator, PagedKVCache,
                                    pow2_bucket)
 from repro.serving.loadgen import ArrivalTrace, TracedRequest, replay
 from repro.serving.sampling import SamplingParams, sample
+from repro.serving.spec_decode import SpecConfig, spec_supported
 from repro.serving.scheduler import METRIC_KEYS, ContinuousBatchingEngine, GenRequest

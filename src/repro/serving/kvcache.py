@@ -182,7 +182,20 @@ class BlockAllocator:
     # ------------------------------------------------------------- #
     def register(self, bid: int, h: int) -> None:
         """Publish ``bid`` as the cached block for prefix hash ``h``. An
-        existing mapping wins (first writer keeps serving the prefix)."""
+        existing mapping for ``h`` wins (first writer keeps serving the
+        prefix). A block carries at most ONE hash: re-registering a block
+        under a new hash retires its old mapping — otherwise the stale
+        ``_by_hash`` entry would keep serving the old prefix from a block
+        whose content no longer matches it (found by the property-based
+        allocator test)."""
+        old = self._hash[bid]
+        if old is not None and old != h and self._by_hash.get(old) == bid:
+            # the block's content now corresponds to ``h``: its old mapping
+            # must retire even when ``h`` itself is already served by
+            # another block (early return below) — otherwise lookup(old)
+            # would keep attaching content that no longer matches
+            del self._by_hash[old]
+            self._hash[bid] = None
         if h in self._by_hash:
             return
         self._by_hash[h] = bid
@@ -363,6 +376,22 @@ class PagedKVCache:
             return False
         self.attach(slot, bid)
         return True
+
+    def truncate(self, slot: int, keep_blocks: int) -> int:
+        """Speculative-decoding rollback: free ``slot``'s tail blocks beyond
+        the first ``keep_blocks`` (blocks that only ever held rejected
+        verify writes). Tail blocks are private by the scheduler's write
+        discipline — grown fresh for decode, never hash-registered — so
+        freeing returns them straight to the free list. Returns the number
+        of blocks released."""
+        blocks = self.slot_blocks[slot]
+        n = 0
+        while len(blocks) > keep_blocks:
+            self.alloc.free(blocks.pop())
+            n += 1
+        if n:
+            self._dirty()
+        return n
 
     def release_slot(self, slot: int) -> None:
         for bid in self.slot_blocks[slot]:

@@ -13,6 +13,7 @@ slot it landed in — the property the scheduler determinism tests pin down.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,16 +46,28 @@ class SamplingParams:
         return jax.random.fold_in(jax.random.PRNGKey(self.seed), token_index)
 
 
-def _sample_row(logits: jax.Array, params: SamplingParams,
-                key: jax.Array) -> jax.Array:
-    """logits [V] -> scalar int32 token."""
-    if params.is_greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def filter_logits(logits: jax.Array, params: SamplingParams) -> jax.Array:
+    """Temperature-scaled, top-k-masked logits [V] (f32) — THE definition
+    of the distribution ``_sample_row`` draws from. Speculative decoding's
+    accept ratio (``spec_decode.spec_probs``) softmaxes this same filter,
+    so the proposal/target densities can never drift from the sampler."""
     scaled = logits.astype(jnp.float32) / params.temperature
     if params.top_k > 0 and params.top_k < scaled.shape[-1]:
         kth = jnp.sort(scaled)[-params.top_k]
         scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
-    return jax.random.categorical(key, scaled).astype(jnp.int32)
+    return scaled
+
+
+def _sample_row(logits: jax.Array, params: SamplingParams,
+                key: Optional[jax.Array] = None) -> jax.Array:
+    """logits [V] -> scalar int32 token. The single source of the greedy
+    argmax AND of the temperature/top-k filtering (``sample`` and the
+    speculative-decoding draft/accept paths all route through here).
+    ``key`` may be None for greedy params (no randomness consumed)."""
+    if params.is_greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, filter_logits(logits, params)).astype(jnp.int32)
 
 
 def sample(logits: jax.Array, params: SamplingParams,
@@ -63,12 +76,15 @@ def sample(logits: jax.Array, params: SamplingParams,
 
     logits: [V] (text) or [K, V] (multi-codebook audio). Returns an int32
     scalar, or an int32 [K] vector with one draw per codebook (each codebook
-    gets its own fold of the per-token key so draws are independent)."""
+    gets its own fold of the per-token key so draws are independent).
+    Greedy delegates to ``_sample_row``'s argmax (one implementation for
+    both entry points); the [K, V] greedy case is its vmap over codebooks,
+    which is exactly ``argmax(axis=-1)``."""
+    if logits.ndim == 1:
+        key = None if params.is_greedy else params.key_for(token_index)
+        return _sample_row(logits, params, key)
     if params.is_greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    key = params.key_for(token_index)
-    if logits.ndim == 1:
-        return _sample_row(logits, params, key)
-    keys = jax.random.split(key, logits.shape[0])
+    keys = jax.random.split(params.key_for(token_index), logits.shape[0])
     return jnp.stack([_sample_row(logits[k], params, keys[k])
                       for k in range(logits.shape[0])])

@@ -45,6 +45,27 @@ KV-cache v2 (``paged=True``):
   token index).
 * Dense mode stays the default compat path; paged is selected per engine.
 
+Speculative decoding (``spec=SpecConfig(...)``, serving v3):
+
+* A draft ``InferenceSession``-style model (any registry variant —
+  ``int8_dynamic`` by default) proposes ``k`` tokens per step from its own
+  dense per-slot cache; the target scores all ``k+1`` positions in ONE
+  ``verify_step`` / ``verify_step_paged`` pass and the engine commits the
+  longest agreed prefix plus one target token (correction or bonus).
+* Greedy output is bit-identical to the target's baseline ``generate``
+  regardless of draft quality; temperature>0 uses seeded rejection
+  sampling keyed per generated-token index, so accepted streams stay
+  batch-composition-independent (``repro.serving.spec_decode``).
+* Rollback: dense caches roll back by position bookkeeping alone (stale
+  verify writes are masked and overwritten); paged engines additionally
+  truncate each slot's block table and free tail blocks that only held
+  rejected tokens (``PagedKVCache.truncate``) so pool accounting never
+  counts dead speculation.
+* Prompt feeds (chunked-prefill tails, prefix-hit tails, preemption
+  resume) ride the same verify pass — up to ``k+1`` known tokens are
+  force-fed per step, so spec engines consume prompt tails faster than
+  the one-token-per-tick dense path.
+
 Deterministic and thread-free, like the rest of the serving layer.
 """
 from __future__ import annotations
@@ -57,12 +78,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.models import decode_step, decode_step_paged, init_cache, prefill
+from repro.models import (decode_step, decode_step_paged, init_cache, prefill,
+                          verify_step, verify_step_paged)
 from repro.models.config import ModelConfig
 from repro.serving.engine import interpolated_percentile
 from repro.serving.kvcache import (PagedKVCache, hash_prompt_blocks,
                                    paged_supported, pow2_bucket)
 from repro.serving.sampling import SamplingParams, sample
+from repro.serving.spec_decode import (SpecConfig, draft_propose,
+                                       greedy_accept, rejection_sample,
+                                       spec_supported)
 
 #: every metrics() call returns exactly these keys (schema-stable for the
 #: BENCH_*.json pipeline — see benchmarks/report.py and DESIGN.md §Serving v2)
@@ -78,6 +103,12 @@ METRIC_KEYS = (
     "prompt_tokens_computed",    # prompt tokens actually recomputed
     "kv_blocks_peak",            # allocator high-water mark (paged)
     "kv_hbm_bytes_per_req",      # peak cache HBM / n_slots (dense + paged)
+    # speculative decoding (zero for non-spec engines)
+    "spec_events",               # per-slot draft/verify acceptance rounds
+    "spec_draft_tokens",         # draft tokens proposed
+    "spec_accepted_tokens",      # draft tokens accepted AND committed
+    "acceptance_rate",           # accepted / proposed draft tokens
+    "accepted_tokens_per_step",  # committed tokens per verify round (>1 good)
 )
 
 
@@ -106,6 +137,12 @@ class GenRequest:
     _admit_tokens: Optional[jax.Array] = None   # resume feed (prompt + gen)
     _resume_last: Any = None           # last generated token pre-preemption
     _block_hashes: Optional[List[int]] = None   # feed hash chain (cached)
+    # speculative decoding (spec engines only)
+    spec_events: int = 0               # verify rounds this request ran
+    spec_accepted: int = 0             # draft tokens accepted + committed
+    _spec_pending: Optional[List[int]] = None   # committed tokens the DRAFT
+    # cache still lacks (normally derived as [last]; two entries right
+    # after a fully-accepted round emitted a bonus token)
 
     @property
     def prompt_len(self) -> int:
@@ -161,7 +198,8 @@ class ContinuousBatchingEngine:
                  max_queue_depth: int = 0,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 kv_budget_bytes: Optional[int] = None):
+                 kv_budget_bytes: Optional[int] = None,
+                 spec: Optional[SpecConfig] = None):
         # local import: repro.api pulls the fleet stack which imports
         # serving — resolve lazily to stay acyclic (same as engine.py)
         from repro.api.backends import get_backend, use_backend
@@ -186,6 +224,24 @@ class ContinuousBatchingEngine:
         self.prefill_chunk = prefill_chunk
         self.max_queue_depth = max_queue_depth
         self.paged = paged
+        self.spec = spec
+        self.spec_k = 0
+        self._spec_m = 1               # verify span (k + 1) for spec engines
+        if spec is not None:
+            draft_params, draft_cfg, draft_backend = spec.resolve_draft()
+            why = spec_supported(cfg, draft_cfg, spec.k)
+            if why is not None:
+                raise ValueError(f"speculative decoding unsupported: {why}")
+            self.spec_k = spec.k
+            self._spec_m = spec.k + 1
+            self.draft_params = draft_params
+            self.draft_cfg = draft_cfg
+            self.draft_backend = (get_backend(draft_backend)
+                                  if draft_backend is not None
+                                  else self.backend)
+        # cache length: max_len plus verify-span headroom so speculative
+        # writes near the sequence cap never clamp into valid rows
+        self._pad_len = max_len + (self._spec_m if spec is not None else 0)
         self.positions = jnp.zeros((n_slots,), jnp.int32)
         self.active: List[Optional[GenRequest]] = [None] * n_slots
         self.last_tokens = (jnp.zeros((n_slots, 1, cfg.n_codebooks), jnp.int32)
@@ -207,7 +263,7 @@ class ContinuousBatchingEngine:
                 raise ValueError(
                     f"paged=True unsupported for {cfg.name}: {why} "
                     "(use the dense compat path)")
-            max_blocks = -(-max_len // block_size)
+            max_blocks = -(-self._pad_len // block_size)
             if n_blocks is None:
                 if kv_budget_bytes is not None:
                     from repro.serving.kvcache import blocks_for_budget
@@ -226,20 +282,48 @@ class ContinuousBatchingEngine:
             self.cache = self.kv.pools          # alias: pools ARE the cache
         else:
             self.kv = None
-            self.cache = init_cache(cfg, n_slots, max_len)
+            self.cache = init_cache(cfg, n_slots, self._pad_len)
         # jit entry points (shapes fixed by the slot pool), traced with this
-        # engine's backend in scope so the kernel choice is baked in
-        def bind(fn, **jit_kw):
+        # engine's backend in scope so the kernel choice is baked in;
+        # draft=True binds the draft model's backend instead
+        def bind(fn, *, draft=False, **jit_kw):
             jitted = jax.jit(fn, **jit_kw)
 
             def call(*args):
-                with use_backend(self.backend):
+                with use_backend(self.draft_backend if draft
+                                 else self.backend):
                     return jitted(*args)
 
             return call
 
         self._decode = bind(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
-        self._prefill = bind(lambda p, b: prefill(p, b, cfg, pad_to=max_len))
+        self._prefill = bind(
+            lambda p, b: prefill(p, b, cfg, pad_to=self._pad_len))
+        if spec is not None:
+            dcfg = self.draft_cfg
+            # the draft keeps a dense per-slot cache even under a paged
+            # target (ROADMAP follow-up: draft KV sharing); the last row is
+            # a scratch position where idle/prefill slots' batched draft
+            # writes land harmlessly
+            self.draft_cache = init_cache(dcfg, n_slots, self._pad_len)
+            self.draft_positions = jnp.zeros((n_slots,), jnp.int32)
+            self._draft_trash = self._pad_len - 1
+            self._draft_decode = bind(
+                lambda p, c, t, pos: decode_step(p, c, t, pos, dcfg),
+                draft=True)
+            self._draft_prefill = bind(
+                lambda p, b: prefill(p, b, dcfg, pad_to=self._pad_len),
+                draft=True)
+            self._verify = bind(
+                lambda p, c, t, pos: verify_step(p, c, t, pos, cfg))
+            if paged:
+                self._verify_paged = bind(
+                    lambda p, c, t, pos, tabs: verify_step_paged(
+                        p, c, t, pos, tabs, cfg))
+        self.spec_events = 0           # per-slot verify acceptance rounds
+        self.spec_committed = 0        # tokens committed by those rounds
+        self.draft_proposed = 0
+        self.draft_accepted = 0
         if paged:
             self._decode_paged = bind(
                 lambda p, c, t, pos, tabs: decode_step_paged(p, c, t, pos,
@@ -284,6 +368,10 @@ class ContinuousBatchingEngine:
         self.prefix_hit_tokens = 0
         self.prompt_tokens_computed = 0
         self.prompt_tokens_submitted = 0
+        self.spec_events = 0
+        self.spec_committed = 0
+        self.draft_proposed = 0
+        self.draft_accepted = 0
         if self.paged:
             # drop the warmup request's registered blocks + allocator stats
             # so measurement runs start truly cold
@@ -353,12 +441,16 @@ class ContinuousBatchingEngine:
         self.prefill_tokens += chunk
         self.prompt_tokens_computed += chunk
         self.active[slot] = req
+        if self.spec is not None:
+            self._admit_draft(slot, req)
         if chunk == s:
             # whole prompt in cache: prefill logits give the first token
             nxt = sample(last[0, -1], req.sampling, 0)
             req.status = "decode"
             self._record(req, nxt)
             self._set_last(slot, nxt)
+            if req.done:        # max_new_tokens=1 / EOS on the first token
+                self._release(slot)
         else:
             # chunked: feed the rest of the prompt through the batched
             # decode step, one token per tick, alongside active decodes
@@ -447,6 +539,8 @@ class ContinuousBatchingEngine:
         req.cache_pos = cache_tokens
         req.n_consumed = hit or chunk
         self.active[slot] = req
+        if self.spec is not None:
+            self._admit_draft(slot, req)
         if req.n_consumed == s:
             # whole feed in cache (tiny cold prompt): prefill logits give
             # the next token — or the pre-preemption token on resume
@@ -459,10 +553,32 @@ class ContinuousBatchingEngine:
                 req.status = "decode"
                 self._record(req, nxt)
                 self._set_last(slot, nxt)
+                if req.done:    # max_new_tokens=1 / EOS on the first token
+                    self._release(slot)
         else:
             req.status = "prefill"
             self._set_last(slot, self._prompt_token(req, req.n_consumed))
         return True
+
+    def _release(self, slot: int) -> None:
+        """Free a slot whose request just finished (blocks drop in paged
+        mode). Admission must call this too: a done request left in
+        ``active`` would be stepped again and emit a bogus extra token."""
+        self.active[slot] = None
+        self.positions = self.positions.at[slot].set(0)
+        if self.paged:
+            self.kv.release_slot(slot)
+
+    def _admit_draft(self, slot: int, req: GenRequest) -> None:
+        """Prefill the draft's dense cache with the request's whole feed.
+        The draft has no prefix cache: it re-prefills prompt (+ generated
+        tokens on a preemption resume) even when the target got a
+        prefix hit — draft KV sharing is a ROADMAP follow-up."""
+        req._spec_pending = None
+        _, single = self._draft_prefill(self.draft_params,
+                                        {"tokens": req.feed_tokens})
+        self.draft_cache = _tree_insert(self.draft_cache, single, slot)
+        self.draft_positions = self.draft_positions.at[slot].set(req.feed_len)
 
     # ---------------------------------------------------------------- #
     def _pick_victim(self) -> Optional[int]:
@@ -507,15 +623,17 @@ class ContinuousBatchingEngine:
         heapq.heappush(self._pending, (-req.priority, req.rid, req))
 
     def _ensure_blocks(self) -> None:
-        """Grow every active slot's table to cover its next write position,
-        preempting victims when the pool is exhausted."""
+        """Grow every active slot's table to cover its next write position
+        (the whole k+1 verify span for spec engines), preempting victims
+        when the pool is exhausted."""
         kv = self.kv
         bs = kv.block_size
+        span = self._spec_m if self.spec is not None else 1
         for slot in range(self.n_slots):
             req = self.active[slot]
             if req is None:
                 continue
-            while req.cache_pos // bs >= len(kv.slot_blocks[slot]):
+            while (req.cache_pos + span - 1) // bs >= len(kv.slot_blocks[slot]):
                 if kv.grow(slot):
                     continue
                 victim = self._pick_victim()
@@ -546,8 +664,197 @@ class ContinuousBatchingEngine:
             req.finished_at = time.perf_counter()
 
     # ---------------------------------------------------------------- #
+    # Speculative decoding step (spec engines)
+    # ---------------------------------------------------------------- #
+    def _draft_phase(self, decode_slots: List[int]
+                     ) -> Tuple[Dict[int, List[int]],
+                                Dict[int, List[Any]], Dict[int, List[int]]]:
+        """k batched draft decode steps. Each decode-status slot's feed is
+        its pending tokens (committed tokens the draft cache still lacks)
+        followed by the draft's own proposals; idle/prefill slots feed a
+        zero token at the scratch position. Returns (proposals, draft
+        probability rows for sampled slots, pending per slot)."""
+        proposals: Dict[int, List[int]] = {s: [] for s in decode_slots}
+        dprobs: Dict[int, List[Any]] = {s: [] for s in decode_slots}
+        pend: Dict[int, List[int]] = {}
+        n0: Dict[int, int] = {}
+        for s in decode_slots:
+            req = self.active[s]
+            pend[s] = list(req._spec_pending or [req.out_tokens[-1]])
+            n0[s] = len(req.out_tokens)
+        in_decode = jnp.asarray(
+            [r is not None and r.status == "decode" for r in self.active])
+        base_pos = jnp.where(in_decode, self.draft_positions,
+                             self._draft_trash)
+        for i in range(self.spec_k):
+            feed = [0] * self.n_slots
+            for s in decode_slots:
+                j = i - len(pend[s])
+                feed[s] = int(pend[s][i] if j < 0 else proposals[s][j])
+            toks = jnp.asarray(feed, jnp.int32).reshape(self.n_slots, 1)
+            logits, self.draft_cache = self._draft_decode(
+                self.draft_params, self.draft_cache, toks, base_pos + i)
+            last = logits[:, -1]
+            batch_argmax = None
+            for s in decode_slots:
+                j = i - len(pend[s]) + 1     # proposal produced this round
+                if j < 0:
+                    continue                 # still catching up on pending
+                req = self.active[s]
+                if req.sampling.is_greedy:
+                    if batch_argmax is None:
+                        batch_argmax = jnp.argmax(last, axis=-1).tolist()
+                    proposals[s].append(int(batch_argmax[s]))
+                else:
+                    tok, probs = draft_propose(last[s], req.sampling,
+                                               n0[s] + j)
+                    proposals[s].append(tok)
+                    dprobs[s].append(probs)
+        return proposals, dprobs, pend
+
+    def _step_spec(self) -> int:
+        """Spec engine step: admit -> draft k proposals -> one multi-token
+        verify -> per-slot accept/commit with rollback. Prompt-feeding
+        slots ride the same verify pass, consuming up to k+1 feed tokens.
+        Returns #occupied (same contract as ``step``)."""
+        self._admit()
+        if self.paged:
+            self._ensure_blocks()            # covers the whole verify span
+        active_idx = [s for s in range(self.n_slots)
+                      if self.active[s] is not None]
+        if not active_idx:
+            return 0
+        m = self._spec_m
+        decode_slots = [s for s in active_idx
+                        if self.active[s].status == "decode"]
+        proposals, dprobs, _ = (self._draft_phase(decode_slots)
+                                if decode_slots else ({}, {}, {}))
+        # candidate matrix [B, m]: [last committed, draft proposals...] for
+        # decode slots, the next feed tokens for prompt-feeding slots,
+        # zero-padded (pad writes are stale-by-position and overwritten)
+        cand = [[0] * m for _ in range(self.n_slots)]
+        t_feed: Dict[int, int] = {}
+        for s in active_idx:
+            req = self.active[s]
+            if req.status == "decode":
+                row = [int(req.out_tokens[-1])] + proposals[s]
+            else:
+                t_f = min(m, req.feed_len - req.n_consumed)
+                t_feed[s] = t_f
+                row = [int(t) for t in
+                       req.feed_tokens[0, req.n_consumed:
+                                       req.n_consumed + t_f].tolist()]
+            cand[s][:len(row)] = row
+        cand_arr = jnp.asarray(cand, jnp.int32)
+        if self.paged:
+            logits, self.kv.pools = self._verify_paged(
+                self.params, self.kv.pools, cand_arr, self.positions,
+                self.kv.tables)
+            self.cache = self.kv.pools
+        else:
+            logits, self.cache = self._verify(self.params, self.cache,
+                                              cand_arr, self.positions)
+        self.steps += 1
+        tgt_argmax = None
+        pos_delta = [0] * self.n_slots
+        n_occupied = 0
+        for s in active_idx:
+            req = self.active[s]
+            if req.status != "decode":
+                n_occupied += self._commit_feed(s, req, t_feed[s], logits)
+                pos_delta[s] = t_feed[s]
+            else:
+                k_s = len(proposals[s])
+                if req.sampling.is_greedy:
+                    if tgt_argmax is None:
+                        tgt_argmax = jnp.argmax(logits, axis=-1).tolist()
+                    n_acc, toks = greedy_accept(proposals[s],
+                                                tgt_argmax[s][:k_s + 1])
+                else:
+                    n_acc, toks = rejection_sample(
+                        proposals[s], dprobs[s], logits[s], req.sampling,
+                        len(req.out_tokens))
+                occupied, c = self._commit_spec(s, req, n_acc, k_s, toks)
+                n_occupied += occupied
+                pos_delta[s] = c
+                req.cache_pos += c
+            if req.done:
+                self._release(s)
+                pos_delta[s] = 0
+        self.positions = self.positions + jnp.asarray(pos_delta, jnp.int32)
+        if self.paged:
+            # rollback: drop tail blocks that only ever held rejected
+            # verify writes (or pad garbage) — pool accounting must not
+            # carry dead speculation between steps
+            for s in active_idx:
+                req = self.active[s]
+                if req is not None:
+                    self.kv.truncate(
+                        s, self.kv.blocks_for_tokens(req.cache_pos))
+        return n_occupied
+
+    def _commit_feed(self, slot: int, req: GenRequest, t_f: int,
+                     logits) -> int:
+        """Advance a prompt-feeding slot by the ``t_f`` feed tokens the
+        verify pass just wrote; on completion emit the first new token
+        (or swap in the pre-preemption resume token)."""
+        start = req.n_consumed
+        req.n_consumed += t_f
+        req.cache_pos += t_f
+        self.prompt_tokens_computed += (min(req.n_consumed, req.prompt_len)
+                                        - min(start, req.prompt_len))
+        if req.n_consumed < req.feed_len:
+            self._set_last(slot, self._prompt_token(req, req.n_consumed))
+            return 1
+        req.status = "decode"
+        if req._resume_last is not None:
+            self._set_last(slot, req._resume_last)
+            req._resume_last = None
+            return 1
+        nxt = sample(logits[slot, t_f - 1], req.sampling,
+                     len(req.out_tokens))
+        self._record(req, int(nxt))
+        self._set_last(slot, nxt)
+        return 0 if req.done else 1
+
+    def _commit_spec(self, slot: int, req: GenRequest, n_acc: int,
+                     k_s: int, toks: List[int]) -> Tuple[int, int]:
+        """Commit one verify round's tokens (stopping at EOS/budget) and
+        update acceptance stats and the draft-side bookkeeping. Returns
+        (still_occupied, tokens_committed)."""
+        c = 0
+        for t in toks:
+            self._record(req, int(t))
+            c += 1
+            if req.done:
+                break
+        self.spec_events += 1
+        self.spec_committed += c
+        self.draft_proposed += k_s
+        accepted = min(n_acc, c)
+        self.draft_accepted += accepted
+        req.spec_events += 1
+        req.spec_accepted += accepted
+        if req.done:
+            req._spec_pending = None
+            return 0, c
+        if c == k_s + 1 and n_acc == k_s:
+            # bonus round: the draft never consumed its own last proposal,
+            # so the next draft phase must feed it before the bonus token
+            req._spec_pending = [toks[c - 2], toks[c - 1]]
+        else:
+            req._spec_pending = [toks[c - 1]]
+        self._set_last(slot, toks[c - 1])
+        total = req.prompt_len + len(req.out_tokens)
+        self.draft_positions = self.draft_positions.at[slot].set(
+            total - len(req._spec_pending))
+        return 1, c
+
+    # ---------------------------------------------------------------- #
     def step(self) -> int:
         """Admit -> one batched decode step -> harvest. Returns #occupied."""
+        if self.spec is not None:
+            return self._step_spec()
         self._admit()
         if self.paged:
             self._ensure_blocks()                # may preempt under pressure
@@ -598,10 +905,7 @@ class ContinuousBatchingEngine:
             self._record(req, nxt)
             self._set_last(slot, nxt)
             if req.done:
-                self.active[slot] = None         # slot frees mid-flight
-                self.positions = self.positions.at[slot].set(0)
-                if self.paged:                   # refcounts drop on EOS/done
-                    self.kv.release_slot(slot)
+                self._release(slot)              # slot frees mid-flight
             else:
                 n_occupied += 1
         return n_occupied
@@ -640,6 +944,13 @@ class ContinuousBatchingEngine:
                              if self.prompt_tokens_submitted else 0.0),
             kv_blocks_peak=(self.kv.alloc.stats.peak_in_use
                             if self.paged else 0),
+            spec_events=self.spec_events,
+            spec_draft_tokens=self.draft_proposed,
+            spec_accepted_tokens=self.draft_accepted,
+            acceptance_rate=(self.draft_accepted / self.draft_proposed
+                             if self.draft_proposed else 0.0),
+            accepted_tokens_per_step=(self.spec_committed / self.spec_events
+                                      if self.spec_events else 0.0),
         )
         if not done:
             return m

@@ -1,0 +1,208 @@
+"""Speculative decoding: draft-k / verify-1 policies (serving v3 tentpole).
+
+The paper's result is that signed-int8 quantization cuts edge inference
+time substantially at a small accuracy cost. Speculative decoding removes
+even that cost from the *sampling semantics*: a cheap draft variant (the
+registry's ``int8_dynamic`` by default) proposes ``k`` tokens per step and
+the fp32 target scores all ``k+1`` positions in ONE ``verify_step`` pass,
+accepting the longest draft prefix the target agrees with. The deployment
+gets int8-class decode throughput while the emitted stream follows the
+target's distribution exactly:
+
+* greedy (``temperature == 0``): token-match acceptance — the output is
+  *bit-identical* to the target's own ``InferenceSession.generate``,
+  regardless of draft quality (a bad draft only lowers the acceptance
+  rate, never changes a token);
+* ``temperature > 0``: seeded rejection sampling (Leviathan et al. 2023 /
+  Chen et al. 2023): accept draft token ``d`` with probability
+  ``min(1, p(d)/q(d))``, else resample from ``max(p - q, 0)``. Every
+  random draw is keyed off ``SamplingParams.key_for(token_index)`` (plus a
+  per-role fold), so accepted streams depend only on (seed, token index) —
+  never on batch composition, slot layout, or admission order, matching
+  the scheduler-determinism contract of ``repro.serving.sampling``.
+
+The scheduler side (``ContinuousBatchingEngine(spec=SpecConfig(...))``)
+lives in ``repro.serving.scheduler``; this module holds the policy layer:
+``SpecConfig``, the support gate, and the pure acceptance functions.
+
+Caveat: capacity-routed MoE targets verify fine but without the greedy
+bit-parity guarantee — expert capacity depends on tokens-per-pass, so a
+multi-token verify can route differently than k single-token decodes
+(same caveat as chunked prefill on MoE; see DESIGN §Speculative decoding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serving.kvcache import paged_supported
+from repro.serving.sampling import SamplingParams
+
+#: fold_in tags separating the three PRNG roles of one generated-token
+#: index; the plain ``key_for(i)`` stream stays reserved for ``sample()``
+#: (bonus/correction draws), so spec and non-spec engines sampling token
+#: ``i`` from the same distribution see independent-but-seeded draws.
+DRAFT_TAG = 0x5BEC
+ACCEPT_TAG = 0xACC1
+RESIDUAL_TAG = 0x4E51
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding policy for one engine.
+
+    draft          the draft model: a ``repro.api.ModelArtifact``, an
+                   ``InferenceSession`` (its pinned backend is inherited),
+                   or a ``(params, cfg)`` tuple
+    k              draft tokens proposed per verify step (>= 1)
+    draft_backend  kernel backend for the draft's compiled entry points
+                   (default: inherit from the draft session, else the
+                   target engine's backend)
+    """
+
+    draft: Any
+    k: int = 4
+    draft_backend: Any = None
+
+    def resolve_draft(self) -> Tuple[Any, ModelConfig, Any]:
+        """-> (draft_params, draft_cfg, backend_or_None)."""
+        from repro.serving.engine import InferenceSession
+
+        d = self.draft
+        if isinstance(d, InferenceSession):
+            return d.params, d.cfg, (self.draft_backend
+                                     if self.draft_backend is not None
+                                     else d.backend)
+        if hasattr(d, "params") and hasattr(d, "config"):   # ModelArtifact
+            return d.params, d.config, self.draft_backend
+        params, cfg = d
+        return params, cfg, self.draft_backend
+
+
+def spec_supported(target_cfg: ModelConfig,
+                   draft_cfg: ModelConfig, k: int) -> Optional[str]:
+    """Why this (target, draft, k) trio cannot run speculative decoding,
+    or None if it can. The verify forward shares the paged cache's
+    constraints (attention-only stack, full attention, single codebook)
+    for BOTH models, and the pair must emit into one token space."""
+    if k < 2:
+        # after a fully-accepted round the draft is one token behind (it
+        # never consumed its own last proposal): the next draft phase
+        # spends one of its k feeds catching up, so k == 1 would leave no
+        # room to propose anything
+        return f"k must be >= 2, got {k}"
+    for role, cfg in (("target", target_cfg), ("draft", draft_cfg)):
+        why = paged_supported(cfg)
+        if why is not None:
+            return f"{role} {cfg.name}: {why}"
+        if cfg.frontend != "none":
+            return (f"{role} {cfg.name}: frontend conditioning is not "
+                    "supported under speculative decoding yet")
+    if target_cfg.vocab_size != draft_cfg.vocab_size:
+        return (f"vocab mismatch: target {target_cfg.vocab_size} vs "
+                f"draft {draft_cfg.vocab_size} — draft and target must "
+                "share one token space")
+    return None
+
+
+# --------------------------------------------------------------------- #
+# Acceptance policies (pure; one (request, step) at a time)
+# --------------------------------------------------------------------- #
+def greedy_accept(draft_tokens: Sequence[int],
+                  target_tokens: Sequence[int]) -> Tuple[int, List[int]]:
+    """Token-match acceptance for greedy requests.
+
+    draft_tokens: the k_s proposals; target_tokens: the target's argmax at
+    each of the k_s+1 scored positions. Returns ``(n_accepted,
+    committed)`` where committed is the emitted stream for this step: the
+    accepted draft prefix, then the target's token at the first divergence
+    (correction) — or the bonus token when every draft was accepted. The
+    committed stream equals what the target alone would have produced, so
+    greedy spec output is bit-identical to the baseline."""
+    committed: List[int] = []
+    for i, d in enumerate(draft_tokens):
+        t = int(target_tokens[i])
+        if int(d) != t:
+            committed.append(t)
+            return i, committed
+        committed.append(t)
+    committed.append(int(target_tokens[len(draft_tokens)]))
+    return len(draft_tokens), committed
+
+
+def spec_probs(logits: jax.Array, params: SamplingParams) -> jax.Array:
+    """logits [V] -> f32 probabilities under the SAME temperature + top-k
+    filter ``sampling._sample_row`` draws from (shared via
+    ``sampling.filter_logits``), so target and draft distributions in the
+    accept ratio match what each model would actually sample."""
+    from repro.serving.sampling import filter_logits
+
+    return jax.nn.softmax(filter_logits(logits, params), axis=-1)
+
+
+def draft_key(params: SamplingParams, token_index: int) -> jax.Array:
+    return jax.random.fold_in(params.key_for(token_index), DRAFT_TAG)
+
+
+def draft_propose(logits: jax.Array, params: SamplingParams,
+                  token_index: int) -> Tuple[int, Optional[jax.Array]]:
+    """One draft proposal from the draft model's logits [V]: a draw from
+    the filtered draft distribution under the DRAFT_TAG key (greedy params
+    take the argmax and consume no randomness). Returns ``(token, q)``
+    where ``q`` is the filtered distribution the token was drawn from —
+    the proposal density the accept ratio needs (None for greedy)."""
+    from repro.serving.sampling import _sample_row
+
+    if params.is_greedy:
+        return int(_sample_row(logits, params)), None
+    tok = _sample_row(logits, params, draft_key(params, token_index))
+    return int(tok), spec_probs(logits, params)
+
+
+def rejection_sample(draft_tokens: Sequence[int], draft_probs: jax.Array,
+                     target_logits: jax.Array, params: SamplingParams,
+                     n_generated: int) -> Tuple[int, List[int]]:
+    """Seeded rejection sampling over one verify span (temperature > 0).
+
+    draft_tokens: k_s proposals; draft_probs [k_s, V]: the filtered draft
+    distribution each proposal was drawn from; target_logits [>=k_s+1, V]:
+    the verify logits; n_generated: tokens already emitted by this request
+    (the committed stream's next token index). Returns ``(n_accepted,
+    committed)`` like ``greedy_accept``. Marginally, each emitted token is
+    distributed exactly as target sampling — the draft only changes how
+    many tokens one verify pass yields."""
+    committed: List[int] = []
+    for i, d in enumerate(draft_tokens):
+        d = int(d)
+        idx = n_generated + i
+        p = spec_probs(target_logits[i], params)
+        q = draft_probs[i]
+        u = jax.random.uniform(
+            jax.random.fold_in(params.key_for(idx), ACCEPT_TAG))
+        ratio = p[d] / jnp.maximum(q[d], 1e-20)
+        if float(u) <= float(ratio):
+            committed.append(d)
+            continue
+        residual = jnp.maximum(p - q, 0.0)
+        total = residual.sum()
+        # p == q exactly (e.g. identical draft): the residual is empty and
+        # the accept ratio was 1, so this branch is unreachable in exact
+        # arithmetic — guard the float edge by falling back to p
+        dist = jnp.where(total > 0, residual / jnp.maximum(total, 1e-20), p)
+        tok = jax.random.categorical(
+            jax.random.fold_in(params.key_for(idx), RESIDUAL_TAG),
+            jnp.log(jnp.maximum(dist, 1e-38)))
+        committed.append(int(tok))
+        return i, committed
+    # every draft accepted: bonus token from the last scored position via
+    # the plain sample() stream (same key a non-spec engine would use)
+    from repro.serving.sampling import sample
+
+    bonus = sample(target_logits[len(draft_tokens)], params,
+                   n_generated + len(draft_tokens))
+    committed.append(int(bonus))
+    return len(draft_tokens), committed

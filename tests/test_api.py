@@ -35,6 +35,26 @@ def _calib(cfg, n=2):
 # --------------------------------------------------------------------- #
 # VariantSpec / publish_variants
 # --------------------------------------------------------------------- #
+def test_draft_of_relation_resolves_to_spec_config(setup):
+    """VariantSpec(draft_of=...) is recorded at publish time; the registry
+    resolves it and Deployment.spec_config turns the pair into a serving
+    SpecConfig (target fp32, int8 draft)."""
+    cfg, params, registry = setup
+    dep = Deployment(registry, model="m")
+    model = ModelArtifact.create("m", "v1", params, cfg)
+    dep.publish(model, specs=[VariantSpec.fp32(),
+                              VariantSpec.dynamic_int8(draft_of="fp32")])
+    ref = registry.draft_for("m", "v1", "fp32")
+    assert ref is not None and ref.variant == "dynamic_int8"
+    assert registry.draft_for("m", "v1", "static_int8") is None
+    spec = dep.spec_config(target_variant="fp32", k=3)
+    assert spec.k == 3
+    assert spec.draft.variant == "dynamic_int8"
+    assert spec.draft.config.vocab_size == cfg.vocab_size
+    with pytest.raises(KeyError, match="draft"):
+        dep.spec_config(target_variant="static_int8")
+
+
 def test_publish_variants_declarative(setup):
     cfg, params, registry = setup
     model = ModelArtifact.create("m", "v1", params, cfg)

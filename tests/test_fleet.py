@@ -13,6 +13,8 @@ from repro.fleet import (ArtifactRegistry, DeviceProfile, EdgeAgent,
                          FleetOrchestrator, HealthGate, InstallError)
 from repro.models import init_params
 
+pytestmark = pytest.mark.slow   # full-suite CI job only (see pytest.ini)
+
 
 @pytest.fixture
 def setup(tmp_path):

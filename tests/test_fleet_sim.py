@@ -16,6 +16,8 @@ from repro.fleet.simulator import DeviceSpec
 from repro.fleet.telemetry import InferenceRecord, TelemetryHub
 from repro.models import init_params
 
+pytestmark = pytest.mark.slow   # full-suite CI job only (see pytest.ini)
+
 
 @pytest.fixture(scope="module")
 def setup(tmp_path_factory):

@@ -1,10 +1,12 @@
 """KV-cache v2 unit tests: block allocator invariants (refcounts, LRU
-eviction, copy-on-write, prefix hashes), pool scatter/gather round-trips,
-and sizing helpers."""
+eviction, copy-on-write, prefix hashes) including a property-based pass
+over random op interleavings, pool scatter/gather round-trips, and sizing
+helpers."""
 import jax
 import jax.numpy as jnp
 import pytest
 
+from hypothesis_compat import given, settings, st
 from repro import configs as C
 from repro.models import init_params, prefill
 from repro.serving.kvcache import (BlockAllocator, PagedKVCache,
@@ -112,6 +114,116 @@ def test_pow2_bucket():
 
 
 # ------------------------------------------------------------------ #
+# Property-based allocator hardening (hypothesis via the compat shim)
+# ------------------------------------------------------------------ #
+def _check_allocator_invariants(a, live):
+    """The allocator's conservation laws against the reference model
+    ``live`` (block id -> expected refcount):
+
+      * every usable block is in EXACTLY one of free / cached / live;
+      * free + cached + live == pool size;
+      * per-block refcounts match the model (0 outside ``live``);
+      * the trash block 0 is never handed out.
+    """
+    free = set(a._free)
+    cached = set(a._cached.values())
+    owned = set(live)
+    assert 0 not in owned
+    assert len(free) == a.n_free, "duplicate ids on the free list"
+    assert len(cached) == a.n_cached
+    assert free | cached | owned == set(range(1, a.n_blocks))
+    assert not (free & cached) and not (free & owned) and not (cached & owned)
+    assert a.n_free + a.n_cached + a.in_use == a.usable_blocks
+    assert a.in_use == len(owned)
+    for bid in range(1, a.n_blocks):
+        assert a.refcount(bid) == live.get(bid, 0), bid
+    for h, bid in a._by_hash.items():
+        assert a._hash[bid] == h, "hash index out of sync with block hash"
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 40), n_blocks=st.integers(3, 24),
+       n_ops=st.integers(40, 160))
+def test_allocator_random_interleavings(seed, n_blocks, n_ops):
+    """Random alloc/retain/free/register/lookup/peek/CoW interleavings
+    must preserve refcount conservation, the free/cached/live partition,
+    and no-double-hand-out — the serving stack's memory-safety core."""
+    import random
+
+    rng = random.Random(seed)
+    a = BlockAllocator(n_blocks, 4)
+    live = {}                               # bid -> model refcount
+    issued_hashes = []
+    next_hash = iter(range(10_000, 10_000 + n_ops))
+    for _ in range(n_ops):
+        op = rng.choice(["alloc", "alloc", "retain", "free", "free",
+                         "register", "lookup", "peek", "cow"])
+        if op == "alloc":
+            before = a.available()
+            bid = a.alloc()
+            if bid is None:
+                assert before == 0, "alloc failed with blocks available"
+            else:
+                assert bid not in live and bid != 0
+                live[bid] = 1
+        elif op == "retain" and live:
+            bid = rng.choice(sorted(live))
+            a.retain(bid)
+            live[bid] += 1
+        elif op == "free" and live:
+            bid = rng.choice(sorted(live))
+            a.free(bid)
+            live[bid] -= 1
+            if not live[bid]:
+                del live[bid]
+        elif op == "register" and live:
+            bid = rng.choice(sorted(live))
+            if issued_hashes and rng.random() < 0.3:
+                # re-register under an existing hash: exercises both the
+                # mapping-already-taken early return and old-hash retirement
+                h = rng.choice(issued_hashes)
+            else:
+                h = next(next_hash)
+                issued_hashes.append(h)
+            a.register(bid, h)
+        elif op == "lookup" and issued_hashes:
+            h = rng.choice(issued_hashes)
+            bid = a.lookup(h)
+            if bid is None:
+                assert h not in a._by_hash, "lookup missed a live mapping"
+            else:
+                live[bid] = live.get(bid, 0) + 1
+        elif op == "peek" and issued_hashes:
+            snap = (a.n_free, a.n_cached, a.in_use, list(a._ref))
+            a.peek(rng.choice(issued_hashes))
+            assert snap == (a.n_free, a.n_cached, a.in_use, list(a._ref)), \
+                "peek mutated allocator state"
+        elif op == "cow" and live:
+            bid = rng.choice(sorted(live))
+            shared = live[bid] > 1 or a._hash[bid] is not None
+            try:
+                new, copied = a.ensure_writable(bid)
+            except MemoryError:
+                assert a.available() == 0   # only legal when exhausted
+                continue
+            assert copied == shared
+            if copied:
+                live[bid] -= 1
+                if not live[bid]:
+                    del live[bid]
+                assert new not in live
+                live[new] = 1
+            else:
+                assert new == bid
+        _check_allocator_invariants(a, live)
+    # drain: releasing every reference returns the whole pool
+    for bid, n in list(live.items()):
+        for _ in range(n):
+            a.free(bid)
+    _check_allocator_invariants(a, {})
+
+
+# ------------------------------------------------------------------ #
 # PagedKVCache pools
 # ------------------------------------------------------------------ #
 @pytest.fixture(scope="module")
@@ -160,6 +272,23 @@ def test_release_returns_blocks(cfg_params):
     kv.release_slot(0)
     assert kv.alloc.in_use == 0 and kv.slot_blocks[0] == []
     assert (kv.tables == -1).all()
+
+
+def test_truncate_frees_tail_blocks_only(cfg_params):
+    """Speculative rollback primitive: truncate drops tail blocks back to
+    the free pool and leaves the kept prefix (and other slots) alone."""
+    cfg, _ = cfg_params
+    kv = PagedKVCache(cfg, n_slots=2, n_blocks=10, block_size=4,
+                      max_blocks_per_seq=6)
+    for _ in range(4):
+        assert kv.grow(0)
+    assert kv.grow(1)
+    kept = list(kv.slot_blocks[0][:2])
+    assert kv.truncate(0, 2) == 2
+    assert kv.slot_blocks[0] == kept
+    assert kv.alloc.in_use == 3            # 2 kept + slot 1's block
+    assert kv.truncate(0, 2) == 0          # idempotent at the target size
+    assert (kv.tables[0, 2:] == -1).all()
 
 
 def test_make_writable_copies_pool_contents(cfg_params):

@@ -1,4 +1,6 @@
-"""Serving engine: micro-batching queue semantics + generate consistency."""
+"""Serving engine: micro-batching queue semantics, generate consistency,
+and the sampling policy layer (seeded distribution correctness, top-k edge
+cases, greedy single-source regression)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,8 +8,10 @@ import numpy as np
 from conftest import make_batch
 from repro import configs as C
 from repro.models import forward, init_params
-from repro.serving import InferenceSession, Pipeline, RequestQueue
+from repro.serving import (InferenceSession, Pipeline, RequestQueue,
+                           SamplingParams)
 from repro.serving.engine import InferenceStats, interpolated_percentile
+from repro.serving.sampling import _sample_row, sample
 
 
 def _session():
@@ -93,6 +97,76 @@ def test_generate_prefill_pads_to_pow2_bucket():
     out = session.generate(batch, n_new=1)
     np.testing.assert_array_equal(np.asarray(out[:, 0]),
                                   np.asarray(jnp.argmax(logits[:, -1], -1)))
+
+
+# ------------------------------------------------------------------ #
+# Sampling policy layer
+# ------------------------------------------------------------------ #
+def test_sample_distribution_chi_square():
+    """Seeded draws of sample() at temperature>0 must follow the softmax
+    of the scaled logits: a chi-square fit over 4000 draws (one per token
+    index — each index is an independent key) stays below the 99.9%
+    quantile for V-1 dof. Deterministic: fixed seed, fixed threshold."""
+    v, n = 8, 4000
+    logits = jnp.asarray([2.0, 1.5, 1.0, 0.5, 0.0, -0.5, -1.0, -2.0])
+    params = SamplingParams(temperature=1.3, seed=5)
+    probs = np.asarray(jax.nn.softmax(logits / params.temperature))
+    counts = np.zeros(v)
+    for i in range(n):
+        counts[int(sample(logits, params, i))] += 1
+    expected = probs * n
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    # chi2 inv-cdf(0.999, dof=7) ~ 24.3
+    assert chi2 < 24.3, (chi2, counts.tolist())
+
+
+def test_top_k_one_equals_greedy():
+    key = jax.random.PRNGKey(0)
+    greedy = SamplingParams()
+    k1 = SamplingParams(temperature=0.7, top_k=1, seed=9)
+    for i in range(32):
+        logits = jax.random.normal(jax.random.fold_in(key, i), (16,))
+        assert int(sample(logits, k1, i)) == int(sample(logits, greedy, i))
+
+
+def test_top_k_geq_vocab_equals_unrestricted():
+    """top_k >= V leaves the distribution untouched: identical seeds must
+    yield identical draws with top_k=V, top_k=V+5 and top_k=0."""
+    key = jax.random.PRNGKey(1)
+    for i in range(16):
+        logits = jax.random.normal(jax.random.fold_in(key, i), (12,))
+        draws = {int(sample(logits, SamplingParams(temperature=0.9, top_k=k,
+                                                   seed=4), i))
+                 for k in (0, 12, 17)}
+        assert len(draws) == 1
+
+
+def test_top_k_tie_at_kth_logit_keeps_all_ties():
+    """The filter keeps every logit >= the k-th largest: with ties AT the
+    threshold, all tied candidates stay eligible (the cut is by value, not
+    by count) and nothing below the threshold ever appears."""
+    logits = jnp.asarray([3.0, 2.0, 2.0, 2.0, 1.0, 0.0])
+    params = SamplingParams(temperature=1.0, top_k=2, seed=7)
+    seen = {int(sample(logits, params, i)) for i in range(300)}
+    assert seen <= {0, 1, 2, 3}, "a sub-threshold token leaked through"
+    assert seen == {0, 1, 2, 3}, "a tied-at-kth candidate never sampled"
+
+
+def test_greedy_identical_through_both_entry_points():
+    """Regression for the deduplicated greedy path: sample() and
+    _sample_row must agree bit-for-bit, including the [K, V]
+    multi-codebook shape (argmax per codebook)."""
+    key = jax.random.PRNGKey(2)
+    greedy = SamplingParams()
+    row = jax.random.normal(key, (32,))
+    assert int(sample(row, greedy, 0)) == int(_sample_row(row, greedy))
+    assert int(sample(row, greedy, 3)) == int(jnp.argmax(row))
+    multi = jax.random.normal(jax.random.fold_in(key, 1), (4, 32))
+    got = sample(multi, greedy, 0)
+    assert got.shape == (4,)
+    want = [int(_sample_row(multi[k], greedy)) for k in range(4)]
+    assert got.tolist() == want
+    assert got.tolist() == jnp.argmax(multi, axis=-1).tolist()
 
 
 def test_session_stats_recorded():

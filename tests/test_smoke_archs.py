@@ -13,6 +13,8 @@ from repro.training.loss import IGNORE
 ARCHS = C.all_arch_ids()
 SEQ = 32
 
+pytestmark = pytest.mark.slow   # full-suite CI job only (see pytest.ini)
+
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_shapes_no_nan(arch):

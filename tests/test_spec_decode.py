@@ -1,0 +1,333 @@
+"""Speculative decoding: bit-identical greedy parity vs the baseline
+``InferenceSession.generate`` (regardless of draft quality), acceptance
+determinism across batch compositions and seeds, dense-vs-paged spec
+parity, multi-token ``verify_step`` vs sequential ``decode_step`` (GQA and
+MLA), and paged rollback invariants (rejected-tail blocks freed, prefix
+registry never holds rejected tokens)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.api import ModelArtifact, VariantSpec
+from repro.models import (decode_step, init_params, prefill, verify_step)
+from repro.serving import ContinuousBatchingEngine, SamplingParams, SpecConfig
+from repro.serving.kvcache import hash_prompt_blocks
+from repro.serving.spec_decode import (greedy_accept, rejection_sample,
+                                       spec_probs, spec_supported)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    artifact = ModelArtifact.create("m", "v1", params, cfg)
+    int8, _ = VariantSpec.dynamic_int8().build(params, cfg)
+    good_draft = artifact.with_variant("int8_dynamic", int8)
+    # a draft with unrelated weights: proposals are near-random, so almost
+    # everything is rejected — parity must survive that
+    bad_draft = artifact.with_variant("bad",
+                                      init_params(jax.random.PRNGKey(99), cfg))
+    return cfg, artifact, good_draft, bad_draft
+
+
+def _prompts(cfg, n=4, seed=3, lo=5, hi=20):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        s = int(jax.random.randint(k1, (), lo, hi))
+        out.append(jax.random.randint(k2, (1, s), 0, cfg.vocab_size))
+    return out
+
+
+def _engine(artifact, draft, k=3, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    return ContinuousBatchingEngine(artifact, backend="ref",
+                                    spec=SpecConfig(draft=draft, k=k), **kw)
+
+
+def _serve(engine, prompts, max_new=8, sampling=None):
+    reqs = [engine.submit(p, max_new_tokens=max_new,
+                          sampling=(sampling[i] if sampling else None))
+            for i, p in enumerate(prompts)]
+    engine.run()
+    assert all(r.done for r in reqs)
+    return reqs
+
+
+# ------------------------------------------------------------------ #
+# Greedy parity
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("draft_kind", ["good", "bad"])
+@pytest.mark.parametrize("paged", [False, True])
+def test_greedy_parity_vs_baseline_generate(setup, paged, draft_kind):
+    """Spec output must be bit-identical to the fp32 target's own
+    sequential generate — a bad draft only lowers acceptance, never
+    changes a token."""
+    cfg, artifact, good, bad = setup
+    draft = good if draft_kind == "good" else bad
+    session = artifact.session(backend="ref")
+    prompts = _prompts(cfg)
+    expected = [session.generate({"tokens": p}, n_new=8)[0].tolist()
+                for p in prompts]
+    engine = _engine(artifact, draft, paged=paged, block_size=8)
+    reqs = _serve(engine, prompts)
+    for r, exp in zip(reqs, expected):
+        assert r.out_tokens == exp, r.rid
+    m = engine.metrics()
+    if draft_kind == "good":
+        assert m["acceptance_rate"] > 0.5
+        assert m["accepted_tokens_per_step"] > 1.0
+    else:
+        assert m["acceptance_rate"] < 0.5
+        assert m["accepted_tokens_per_step"] >= 1.0
+
+
+def test_spec_step_reduction_with_good_draft(setup):
+    """The point of the exercise: an int8 draft of the same model should
+    accept most proposals, cutting target decode steps well below the
+    sequential token count."""
+    cfg, artifact, good, _ = setup
+    prompts = _prompts(cfg)
+    baseline = ContinuousBatchingEngine(artifact, n_slots=2, max_len=64,
+                                        backend="ref")
+    _serve(baseline, prompts)
+    engine = _engine(artifact, good)
+    _serve(engine, prompts)
+    assert engine.steps < baseline.steps / 1.5
+
+
+# ------------------------------------------------------------------ #
+# Determinism
+# ------------------------------------------------------------------ #
+def test_sampled_determinism_and_composition_independence(setup):
+    """temperature>0 spec decoding replays byte-identically, per-request
+    streams do not depend on batch composition, and dense == paged."""
+    cfg, artifact, _, bad = setup
+    prompts = _prompts(cfg, n=3)
+
+    def run(prompt_list, paged=False):
+        engine = _engine(artifact, bad, paged=paged, block_size=8)
+        sampling = [SamplingParams(temperature=0.9, top_k=6, seed=11 + i)
+                    for i in range(len(prompt_list))]
+        reqs = _serve(engine, prompt_list, max_new=6, sampling=sampling)
+        return [r.out_tokens for r in reqs]
+
+    a = run(prompts)
+    assert run(prompts) == a, "same seeds must replay identically"
+    assert run(prompts[:1])[0] == a[0], \
+        "request 0's stream changed with batch composition"
+    assert run(prompts, paged=True) == a, "paged spec != dense spec"
+
+
+def test_acceptance_stats_composition_independent(setup):
+    """Per-request acceptance counts are a function of (prompt, seed) only
+    — not of which other requests share the batch."""
+    cfg, artifact, good, _ = setup
+    prompts = _prompts(cfg)
+
+    def accepted(prompt_list):
+        engine = _engine(artifact, good)
+        reqs = _serve(engine, prompt_list)
+        return [(r.spec_accepted, r.spec_events) for r in reqs]
+
+    together = accepted(prompts)
+    solo = [accepted([p])[0] for p in prompts]
+    assert together == solo
+
+
+# ------------------------------------------------------------------ #
+# verify_step vs sequential decode_step (model level)
+# ------------------------------------------------------------------ #
+def _verify_vs_sequential(cfg):
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 9),
+                                0, cfg.vocab_size)
+    last, cache_v = prefill(params, {"tokens": tokens}, cfg, pad_to=32)
+    cache_d = jax.tree.map(lambda x: x, cache_v)
+    cand = jax.random.randint(jax.random.PRNGKey(2), (1, 4),
+                              0, cfg.vocab_size)
+    vlogits, _ = verify_step(params, cache_v, cand,
+                             jnp.asarray([9], jnp.int32), cfg)
+    for i in range(4):
+        dlogits, cache_d = decode_step(params, cache_d, cand[:, i:i + 1],
+                                       jnp.int32(9 + i), cfg)
+        np.testing.assert_allclose(np.asarray(vlogits[:, i]),
+                                   np.asarray(dlogits[:, -1]),
+                                   rtol=2e-4, atol=2e-4)
+        assert jnp.argmax(vlogits[0, i]) == jnp.argmax(dlogits[0, -1]), i
+
+
+def test_verify_step_matches_sequential_decode_gqa():
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    _verify_vs_sequential(cfg)
+
+
+def test_verify_step_matches_sequential_decode_mla():
+    """MLA verify core. Experts are disabled: capacity-based MoE routing is
+    sequence-length dependent, so multi-token and single-token passes may
+    legitimately route differently (same reason the paged scheduler parity
+    tests pin GQA archs only)."""
+    cfg = C.smoke_config("deepseek-v2-236b").with_overrides(dtype="float32")
+    cfg = dataclasses.replace(cfg, arch_type="dense", n_experts=0,
+                              n_dense_layers=0)
+    _verify_vs_sequential(cfg)
+
+
+def test_mla_spec_engine_parity(setup):
+    """End-to-end spec engine parity on a (non-MoE) MLA stack."""
+    cfg = C.smoke_config("deepseek-v2-236b").with_overrides(dtype="float32")
+    cfg = dataclasses.replace(cfg, arch_type="dense", n_experts=0,
+                              n_dense_layers=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    artifact = ModelArtifact.create("d", "v1", params, cfg)
+    draft = artifact.with_variant("bad",
+                                  init_params(jax.random.PRNGKey(7), cfg))
+    session = artifact.session(backend="ref")
+    prompts = _prompts(cfg, n=3, seed=5)
+    expected = [session.generate({"tokens": p}, n_new=6)[0].tolist()
+                for p in prompts]
+    for paged in (False, True):
+        engine = _engine(artifact, draft, k=2, max_len=48,
+                         paged=paged, block_size=8)
+        reqs = _serve(engine, prompts, max_new=6)
+        for r, exp in zip(reqs, expected):
+            assert r.out_tokens == exp, (paged, r.rid)
+
+
+# ------------------------------------------------------------------ #
+# Paged rollback invariants
+# ------------------------------------------------------------------ #
+def test_paged_rollback_frees_rejected_blocks(setup):
+    """With a near-random draft nearly every proposal is rejected: after
+    every step the allocator must hold free+cached+live == pool, live
+    blocks must exactly cover committed tokens (no block kept alive by a
+    rejected tail), and at drain-time every block is back (free/cached)."""
+    cfg, artifact, _, bad = setup
+    engine = _engine(artifact, bad, paged=True, block_size=8, n_slots=2,
+                     max_len=64)
+    reqs = [engine.submit(p, max_new_tokens=10) for p in _prompts(cfg)]
+    while engine.has_work:
+        engine.step()
+        alloc = engine.kv.alloc
+        assert (alloc.n_free + alloc.n_cached + alloc.in_use
+                == alloc.usable_blocks)
+        for slot, req in enumerate(engine.active):
+            if req is None:
+                assert engine.kv.slot_blocks[slot] == []
+            else:
+                held = len(engine.kv.slot_blocks[slot])
+                assert held == engine.kv.blocks_for_tokens(req.cache_pos), (
+                    "speculative tail blocks survived rollback")
+    assert all(r.done for r in reqs)
+    alloc = engine.kv.alloc
+    assert alloc.in_use == 0
+    assert alloc.n_free + alloc.n_cached == alloc.usable_blocks
+
+
+def test_paged_prefix_registry_never_holds_rejected_tokens(setup):
+    """Every hash in the allocator's registry must come from a submitted
+    prompt's hash chain — generated/rejected tokens are never registered."""
+    cfg, artifact, _, bad = setup
+    engine = _engine(artifact, bad, paged=True, block_size=8)
+    prompts = _prompts(cfg)
+    _serve(engine, prompts, max_new=10)
+    legal = set()
+    for p in prompts:
+        legal.update(hash_prompt_blocks(p[0].tolist(), 8))
+    registered = set(engine.kv.alloc._by_hash)
+    assert registered <= legal, "non-prompt hash found in prefix registry"
+
+
+def test_paged_spec_preemption_resume_parity(setup):
+    """A pool too small for every request forces preemption mid-spec; the
+    evicted request must resume token-identically."""
+    cfg, artifact, _, bad = setup
+    session = artifact.session(backend="ref")
+    prompts = _prompts(cfg, n=4, seed=9, lo=8, hi=16)
+    expected = [session.generate({"tokens": p}, n_new=12)[0].tolist()
+                for p in prompts]
+    engine = _engine(artifact, bad, paged=True, block_size=8, n_slots=3,
+                     max_len=48, n_blocks=10)
+    reqs = _serve(engine, prompts, max_new=12)
+    for r, exp in zip(reqs, expected):
+        assert r.out_tokens == exp, r.rid
+    assert engine.metrics()["preempted"] > 0, (
+        "workload did not exercise preemption — shrink the pool")
+
+
+# ------------------------------------------------------------------ #
+# Policy layer units + gating
+# ------------------------------------------------------------------ #
+def test_greedy_accept_semantics():
+    assert greedy_accept([5, 6, 7], [5, 6, 7, 9]) == (3, [5, 6, 7, 9])
+    assert greedy_accept([5, 6, 7], [5, 8, 7, 9]) == (1, [5, 8])
+    assert greedy_accept([5], [4, 2]) == (0, [4])
+    assert greedy_accept([], [3]) == (0, [3])
+
+
+def test_rejection_sample_identical_draft_accepts_everything():
+    """p == q: the accept ratio is 1 for every proposal, so the whole
+    draft plus a bonus token commits."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 16))
+    params = SamplingParams(temperature=0.8, seed=3)
+    probs = jnp.stack([spec_probs(logits[i], params) for i in range(3)])
+    drafts = [int(jnp.argmax(probs[i])) for i in range(3)]
+    n_acc, committed = rejection_sample(drafts, probs, logits, params, 0)
+    assert n_acc == 3
+    assert committed[:3] == drafts and len(committed) == 4
+
+
+def test_spec_supported_gates():
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    other = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
+    ssm = C.smoke_config("mamba2-780m")
+    assert spec_supported(cfg, cfg, 3) is None
+    assert "k must be" in spec_supported(cfg, cfg, 1)
+    assert "vocab" in spec_supported(cfg, dataclasses.replace(
+        cfg, vocab_size=cfg.vocab_size * 2), 3)
+    assert spec_supported(ssm, cfg, 3) is not None     # non-attention target
+    assert spec_supported(cfg, ssm, 3) is not None     # non-attention draft
+    assert other.vocab_size == cfg.vocab_size or \
+        spec_supported(cfg, other, 3) is not None
+
+
+@pytest.mark.parametrize("spec_on", [False, True])
+@pytest.mark.parametrize("paged", [False, True])
+def test_request_finishing_at_admission_emits_exactly_one_token(
+        setup, paged, spec_on):
+    """Regression: a request done right at admission (max_new_tokens=1, or
+    EOS on its first token) must free its slot immediately — it used to
+    stay in ``active`` and be stepped again, emitting a bogus extra token
+    (sampled from a garbage verify row on the spec path)."""
+    cfg, artifact, good, _ = setup
+    session = artifact.session(backend="ref")
+    prompt = _prompts(cfg, n=1)[0]
+    first = session.generate({"tokens": prompt}, n_new=1)[0].tolist()
+    kw = {"paged": True, "block_size": 8} if paged else {}
+    if spec_on:
+        engine = _engine(artifact, good, **kw)
+    else:
+        engine = ContinuousBatchingEngine(artifact, n_slots=2, max_len=64,
+                                          backend="ref", **kw)
+    r1 = engine.submit(prompt, max_new_tokens=1)
+    r2 = engine.submit(prompt, max_new_tokens=8, eos_id=first[0])
+    engine.run()
+    assert r1.out_tokens == first, r1.out_tokens
+    assert r2.out_tokens == first, r2.out_tokens
+    assert all(r is None for r in engine.active)
+    if paged:
+        assert engine.kv.alloc.in_use == 0
+
+
+def test_engine_rejects_unsupported_spec(setup):
+    cfg, artifact, good, _ = setup
+    with pytest.raises(ValueError, match="speculative"):
+        ContinuousBatchingEngine(artifact, backend="ref",
+                                 spec=SpecConfig(draft=good, k=1))

@@ -1,6 +1,10 @@
 """End-to-end behaviour tests: the VQI MLOps loop at miniature scale."""
 import tempfile
 
+import pytest
+
+pytestmark = pytest.mark.slow   # full-suite CI job only (see pytest.ini)
+
 import jax
 import jax.numpy as jnp
 
