@@ -27,7 +27,10 @@ from repro.api import (ArtifactRegistry, Deployment, FaultPlan, HealthGate,
 from repro.models import init_params
 
 ARCH = "stablelm-1.6b"
-SEED = 17
+SEED = 17          # fleet-simulator event stream
+INIT_SEED = 0     # model params
+CALIB_SEED = 123  # static-int8 calibration batch
+KV_SEED = 3       # kv-pressure workload prompts
 SPECS = [VariantSpec.fp32(), VariantSpec.dynamic_int8(),
          VariantSpec.static_int8(calib_batches=1)]
 # accuracy gate sized for the 2% base error rate: a bad release (50% error)
@@ -42,7 +45,7 @@ FAULTS = FaultPlan(offline_rate_per_hour=1.0, mean_offline_s=60.0,
 
 
 def _calib_batch(cfg):
-    key = jax.random.PRNGKey(123)
+    key = jax.random.PRNGKey(CALIB_SEED)
     batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
     return batch
 
@@ -89,7 +92,7 @@ def _kv_pressure(registry, cfg) -> Tuple[List[str], Dict[str, Any]]:
     # fraction; the *ratios* between classes are what the bench pins)
     lite_ram = min(p.memory_bytes for _, p, _, _ in DEVICE_CLASSES)
     frac = 5.0 * kv_bytes_per_block(cfg, block_size) / lite_ram
-    key = jax.random.PRNGKey(3)
+    key = jax.random.PRNGKey(KV_SEED)
     kp, ks = jax.random.split(key)
     prefix = jax.random.randint(kp, (1, 8), 0, cfg.vocab_size)
     prompts = [jnp.concatenate(
@@ -129,7 +132,7 @@ def _kv_pressure(registry, cfg) -> Tuple[List[str], Dict[str, Any]]:
 
 def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    params = init_params(jax.random.PRNGKey(INIT_SEED), cfg)
     n_devices = 150 if fast else 400
     lines: List[str] = []
     with tempfile.TemporaryDirectory() as root:

@@ -14,36 +14,50 @@ from repro.api import VariantSpec
 from repro.fleet import ArtifactRegistry, DeviceProfile, EdgeAgent
 from repro.models import init_params
 
+SEED = 0
+
+
+def _tick() -> float:
+    """Open a lifecycle-latency interval. Real wall time is the measured
+    quantity here (these are host-side registry/agent operations)."""
+    # repro: allow-wallclock -- lifecycle latency benchmark start marker
+    return time.perf_counter()
+
+
+def _us(t0: float) -> float:
+    # repro: allow-wallclock -- interval vs the matching _tick()
+    return (time.perf_counter() - t0) * 1e6
+
 
 def run() -> List[str]:
     cfg = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    params = init_params(jax.random.PRNGKey(SEED), cfg)
     qp, _ = VariantSpec.dynamic_int8().build(params, cfg)
     lines = []
     with tempfile.TemporaryDirectory() as root:
         reg = ArtifactRegistry(root)
 
-        t0 = time.perf_counter()
+        t0 = _tick()
         ref_fp = reg.publish("m", "v1", params, cfg, "fp32")
-        lines.append(f"lifecycle_publish_fp32,{(time.perf_counter()-t0)*1e6:.0f},"
+        lines.append(f"lifecycle_publish_fp32,{_us(t0):.0f},"
                      f"size={ref_fp.size_bytes}")
-        t0 = time.perf_counter()
+        t0 = _tick()
         ref_q = reg.publish("m", "v2", qp, cfg, "dynamic_int8")
-        lines.append(f"lifecycle_publish_int8,{(time.perf_counter()-t0)*1e6:.0f},"
+        lines.append(f"lifecycle_publish_int8,{_us(t0):.0f},"
                      f"size={ref_q.size_bytes}")
 
         agent = EdgeAgent("bench-dev", reg, DeviceProfile(memory_bytes=10**10))
-        t0 = time.perf_counter()
+        t0 = _tick()
         agent.install(ref_fp)
-        lines.append(f"lifecycle_install,{(time.perf_counter()-t0)*1e6:.0f},"
+        lines.append(f"lifecycle_install,{_us(t0):.0f},"
                      f"sha_verified=True")
-        t0 = time.perf_counter()
+        t0 = _tick()
         agent.activate(ref_fp)
-        lines.append(f"lifecycle_activate,{(time.perf_counter()-t0)*1e6:.0f},"
+        lines.append(f"lifecycle_activate,{_us(t0):.0f},"
                      f"jit_session_built=True")
         agent.activate(ref_q)
-        t0 = time.perf_counter()
+        t0 = _tick()
         agent.rollback()
-        lines.append(f"lifecycle_rollback,{(time.perf_counter()-t0)*1e6:.0f},"
+        lines.append(f"lifecycle_rollback,{_us(t0):.0f},"
                      f"active={agent.active.variant}")
     return lines

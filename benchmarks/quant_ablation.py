@@ -13,6 +13,9 @@ from repro import configs as C
 from repro.core.quant import QuantConfig, quantize_tree, tree_size_bytes
 from repro.models import forward, init_params
 
+INIT_SEED = 0   # model params
+BATCH_SEED = 1  # eval batch (fp32 reference and quant variants share it)
+
 VARIANTS = [
     ("int8_per_tensor", QuantConfig("dynamic_int8", granularity="per_tensor",
                                     min_size=1024)),
@@ -32,8 +35,8 @@ VARIANTS = [
 def run() -> List[str]:
     cfg = C.smoke_config("stablelm-1.6b").with_overrides(
         dtype="float32", d_model=256, d_ff=768)
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64),
+    params = init_params(jax.random.PRNGKey(INIT_SEED), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(BATCH_SEED), (4, 64),
                                           0, cfg.vocab_size)}
     ref, _ = forward(params, batch, cfg)
     base = tree_size_bytes(params)

@@ -24,6 +24,7 @@ from repro.api import ModelArtifact, QuantRecipe, VariantSpec
 from repro.models import init_params
 
 BENCH_ARCH = "stablelm-1.6b"
+INIT_SEED = 0              # model params
 BACKEND = "ref"            # per-session kernel backend (TPU: "pallas-tpu")
 
 SPECS = [VariantSpec.fp32(),
@@ -57,7 +58,7 @@ def run(iters: int = 10) -> Tuple[List[str], Dict[str, Any]]:
     """Returns (CSV lines for stdout, structured payload for
     ``BENCH_quant.json`` via benchmarks/report.py)."""
     cfg = _cfg()
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    params = init_params(jax.random.PRNGKey(INIT_SEED), cfg)
     variants = build_variants(cfg, params)
     lines = []
     results: Dict[str, Dict[str, float]] = {n: {} for n in variants}

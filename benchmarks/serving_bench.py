@@ -45,7 +45,9 @@ BACKEND = "ref"            # per-engine kernel backend (TPU: "pallas-tpu")
 N_SLOTS = 4
 MAX_LEN = 96
 PREFILL_CHUNK = 6          # chunked prefill: long prompts no longer stall decode
-TRACE_SEED = 7
+TRACE_SEED = 7       # arrival trace
+INIT_SEED = 0        # model params
+SPEC_PROMPT_SEED = 23  # spec-decode section prompts
 # shared-prefix workload (acceptance: >=30% prefill-token reduction)
 PREFIX_LEN = 64            # common VQI prompt prefix
 N_SHARED = 32              # requests sharing it
@@ -151,7 +153,7 @@ def run_spec_decode(cfg, variants, fast: bool) -> Tuple[List[str],
     engines is exported under non-gated names (short-run noise)."""
     max_new = 8 if fast else 12
     n = 6 if fast else 10
-    key = jax.random.PRNGKey(23)
+    key = jax.random.PRNGKey(SPEC_PROMPT_SEED)
     prompts = []
     for i in range(n):
         k1, k2 = jax.random.split(jax.random.fold_in(key, i))
@@ -199,7 +201,7 @@ def run_spec_decode(cfg, variants, fast: bool) -> Tuple[List[str],
 
 def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    params = init_params(jax.random.PRNGKey(INIT_SEED), cfg)
     n_requests = 8 if fast else 16
     trace = ArrivalTrace.generate(cfg, n_requests=n_requests, seed=TRACE_SEED,
                                   mean_interarrival=2.0,

@@ -7,10 +7,8 @@ distribution (the container's CPU plays the Raspberry Pi 4's role).
     PYTHONPATH=src python examples/quantized_serving.py [--scale 256]
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs as C
 from repro.api import DEFAULT_VARIANTS

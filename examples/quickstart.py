@@ -4,7 +4,6 @@
 """
 import argparse
 
-import jax
 import jax.numpy as jnp
 
 from repro import configs as C

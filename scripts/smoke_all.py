@@ -5,13 +5,15 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as C
-from repro.models import decode_step, forward, init_cache, init_params, prefill
+from repro.models import decode_step, forward, init_params, prefill
 
 SEQ = 32
+BATCH_SEED = 0  # smoke batch tokens/embeds
+INIT_SEED = 1   # smoke model params
 
 
 def batch_for(cfg, b=2, s=SEQ):
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(BATCH_SEED)
     s_text = s - cfg.n_frontend_tokens
     tok_shape = (b, s_text, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, s_text)
     batch = {"tokens": jax.random.randint(key, tok_shape, 0, cfg.vocab_size)}
@@ -25,7 +27,7 @@ def main():
     ids = sys.argv[1:] or C.all_arch_ids()
     for arch in ids:
         cfg = C.smoke_config(arch)
-        key = jax.random.PRNGKey(1)
+        key = jax.random.PRNGKey(INIT_SEED)
         params = init_params(key, cfg)
         n_params = sum(x.size for x in jax.tree.leaves(params))
         batch = batch_for(cfg)

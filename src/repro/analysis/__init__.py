@@ -1,0 +1,38 @@
+"""repro.analysis — static analysis for the repo's operational invariants.
+
+The repo's headline guarantees (byte-identical fleet replays, bit-parity
+spec decode, ref-vs-Pallas kernel equivalence, one-compile-per-bucket) are
+enforced at runtime by tests that exercise a small slice of the tree. This
+package makes them checkable *statically*, on every file, before anything
+runs:
+
+``determinism``     wall-clock reads outside ``repro.clock``, unseeded /
+                    magic-constant RNG, unordered set / filesystem
+                    iteration, host syncs inside jit-traced code.
+``kernel_contract`` every ``Backend``-registered kernel has a ref oracle
+                    with a matching signature, Pallas ``BlockSpec`` index
+                    maps are rank/arity-consistent with their grids and
+                    clamp block-table entries, int8 payloads travel with
+                    their scales, the verify family stays dense/paged
+                    signature-compatible.
+``recompile``       Python-value-dependent branches / loop bounds / shapes
+                    inside jit-traced functions (trace errors or silent
+                    per-value recompiles).
+``retrace``         the *runtime* side of the recompile guard: a ``jax.jit``
+                    auditor that counts compiled variants per entry point
+                    and asserts the one-compile-per-pow2-bucket invariant.
+
+CLI: ``python -m repro.analysis src/ [--baseline analysis_baseline.json]``
+— exits non-zero on new error-severity findings (see ``__main__``).
+"""
+from repro.analysis.core import FileContext, collect_files, run_paths
+from repro.analysis.findings import (Finding, load_baseline, write_baseline)
+
+__all__ = [
+    "FileContext",
+    "Finding",
+    "collect_files",
+    "load_baseline",
+    "run_paths",
+    "write_baseline",
+]

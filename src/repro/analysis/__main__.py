@@ -1,0 +1,96 @@
+"""CLI: ``python -m repro.analysis PATH... [options]``.
+
+Exit status is the CI gate: 0 when every error-severity finding is either
+inline-suppressed (with a reason) or fingerprinted in the committed
+baseline; 1 when *new* errors exist. Typical invocations:
+
+    python -m repro.analysis src/
+    python -m repro.analysis src/ benchmarks/ scripts/ \\
+        --baseline analysis_baseline.json --json out/findings.json
+    python -m repro.analysis src/ --update-baseline   # grandfather current
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import run_paths
+from repro.analysis.findings import Finding, load_baseline, write_baseline
+from repro.analysis.kernel_contract import contract_coverage
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="determinism / kernel-contract / recompile static "
+                    "analysis (see DESIGN.md §Static analysis)")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--baseline", default=None,
+                    help="committed suppression baseline (JSON); findings "
+                         "fingerprinted there do not fail the run")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline (default "
+                         "analysis_baseline.json) with current findings")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write findings + kernel-contract coverage table "
+                         "as JSON (CI artifact)")
+    ap.add_argument("--include-tests", action="store_true",
+                    help="also scan tests/ (excluded by default)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warnings too, not only errors")
+    args = ap.parse_args(argv)
+
+    findings, ctxs = run_paths(args.paths, include_tests=args.include_tests)
+    by_path = {c.path: c for c in ctxs}
+
+    def line_text(f: Finding) -> str:
+        ctx = by_path.get(f.path)
+        return ctx.line_text(f.line) if ctx is not None else ""
+
+    baseline_path = args.baseline or "analysis_baseline.json"
+    if args.update_baseline:
+        write_baseline(baseline_path, [(f, line_text(f)) for f in findings])
+        print(f"baseline: wrote {len(findings)} entries to {baseline_path}")
+        return 0
+
+    baseline: Dict[str, Dict[str, object]] = (
+        load_baseline(args.baseline) if args.baseline else {})
+    new: List[Finding] = []
+    grandfathered = 0
+    for f in findings:
+        if f.fingerprint(line_text(f)) in baseline:
+            grandfathered += 1
+        else:
+            new.append(f)
+
+    for f in new:
+        print(f.render())
+
+    if args.json_out:
+        payload = {
+            "version": 1,
+            "paths": args.paths,
+            "findings": [f.to_dict(line_text(f)) for f in new],
+            "baselined": grandfathered,
+            "contract_coverage": contract_coverage(ctxs),
+        }
+        with open(args.json_out, "w") as out:
+            json.dump(payload, out, indent=1, sort_keys=True)
+            out.write("\n")
+
+    coverage = contract_coverage(ctxs)
+    n_err = sum(1 for f in new if f.severity == "error")
+    n_warn = len(new) - n_err
+    print(f"repro.analysis: {len(by_path)} files, {n_err} errors, "
+          f"{n_warn} warnings"
+          + (f", {grandfathered} baselined" if grandfathered else "")
+          + (f", kernel families covered: "
+             f"{', '.join(sorted(coverage))}" if coverage else ""))
+    gate: Tuple[int, ...] = (n_err + n_warn,) if args.strict else (n_err,)
+    return 1 if any(gate) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,251 @@
+"""Pass framework: file walking, AST contexts, name resolution, runner.
+
+Two pass shapes register through decorators:
+
+``@file_pass``     ``fn(ctx: FileContext) -> Iterable[Finding]`` — runs per
+                   file, sees one module's AST.
+``@project_pass``  ``fn(ctxs: List[FileContext]) -> Iterable[Finding]`` —
+                   runs once over the whole scanned set (cross-file
+                   contracts, e.g. backend method -> ref oracle).
+
+``FileContext`` pre-computes the pieces every pass needs: the parsed tree,
+a parent map (ast has no parent links), an import map resolving local
+names to dotted origins (so ``from time import time as t; t()`` is still
+recognized as ``time.time``), and the file's suppression index.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding, SuppressionIndex
+
+DEFAULT_EXCLUDE_DIRS = {"__pycache__", ".git", ".ruff_cache", "build",
+                        "tests", "analysis_fixtures"}
+
+
+# ------------------------------------------------------------------ #
+# File context
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class FileContext:
+    path: str                 # as scanned (posix separators)
+    source: str
+    tree: ast.Module
+    lines: List[str]
+    suppressions: SuppressionIndex
+    parents: Dict[int, ast.AST]           # id(node) -> parent node
+    imports: Dict[str, str]               # local name -> dotted origin
+
+    @classmethod
+    def from_source(cls, path: str, source: str) -> "FileContext":
+        tree = ast.parse(source, filename=path)
+        parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                parents[id(child)] = node
+        return cls(path=path.replace(os.sep, "/"), source=source, tree=tree,
+                   lines=source.splitlines(),
+                   suppressions=SuppressionIndex(source),
+                   parents=parents, imports=_import_map(tree))
+
+    @classmethod
+    def from_path(cls, path: str) -> "FileContext":
+        with open(path, encoding="utf-8") as f:
+            return cls.from_source(path, f.read())
+
+    # -------------------------------------------------------------- #
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents.get(id(node))
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def qualified(self, node: ast.AST) -> Optional[str]:
+        """Dotted origin of a Name/Attribute chain, resolved through this
+        file's imports — ``jnp.maximum`` -> ``jax.numpy.maximum``."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.imports.get(node.id, node.id)
+        parts.append(head)
+        return ".".join(reversed(parts))
+
+    def call_qualified(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Call):
+            return self.qualified(node.func)
+        return None
+
+    def finding(self, rule: str, slug: str, node: ast.AST, message: str,
+                severity: str = "error") -> Finding:
+        return Finding(rule=rule, slug=slug, path=self.path,
+                       line=getattr(node, "lineno", 1), message=message,
+                       severity=severity)
+
+
+def _import_map(tree: ast.Module) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                out[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}")
+    # numpy's conventional alias resolves even without the import (np is
+    # universally numpy in this tree; the map above wins when explicit)
+    out.setdefault("np", "numpy")
+    return out
+
+
+# ------------------------------------------------------------------ #
+# jit-function discovery (shared by determinism + recompile passes)
+# ------------------------------------------------------------------ #
+JIT_NAMES = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+
+
+def _static_names(fn: ast.FunctionDef, call: Optional[ast.Call]) -> Set[str]:
+    """Parameter names marked static via static_argnames/static_argnums."""
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    static: Set[str] = set()
+    kwargs = list(call.keywords) if call is not None else []
+    for kw in kwargs:
+        if kw.arg == "static_argnames":
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    static.add(elt.value)
+        elif kw.arg == "static_argnums":
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                    if 0 <= elt.value < len(params):
+                        static.add(params[elt.value])
+    static.update(a.arg for a in fn.args.kwonlyargs)   # kwonly ~ config
+    return static
+
+
+def iter_jit_functions(ctx: FileContext
+                       ) -> Iterator[Tuple[ast.FunctionDef, Set[str]]]:
+    """(function def, traced-param names) for every jit-decorated def:
+    ``@jax.jit``, ``@jax.jit(...)``, ``@functools.partial(jax.jit, ...)``."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for deco in node.decorator_list:
+            call = deco if isinstance(deco, ast.Call) else None
+            target = deco.func if isinstance(deco, ast.Call) else deco
+            q = ctx.qualified(target)
+            if q in JIT_NAMES:
+                pass                                   # @jax.jit directly
+            elif (q in {"functools.partial", "partial"} and call is not None
+                  and call.args
+                  and ctx.qualified(call.args[0]) in JIT_NAMES):
+                pass                                   # @partial(jax.jit, …)
+            else:
+                continue
+            static = _static_names(node, call)
+            params = {a.arg for a in node.args.posonlyargs + node.args.args}
+            yield node, params - static
+            break
+
+
+# ------------------------------------------------------------------ #
+# Pass registry + runner
+# ------------------------------------------------------------------ #
+FilePassFn = Callable[[FileContext], Iterable[Finding]]
+ProjectPassFn = Callable[[List[FileContext]], Iterable[Finding]]
+
+FILE_PASSES: List[FilePassFn] = []
+PROJECT_PASSES: List[ProjectPassFn] = []
+
+
+def file_pass(fn: FilePassFn) -> FilePassFn:
+    FILE_PASSES.append(fn)
+    return fn
+
+
+def project_pass(fn: ProjectPassFn) -> ProjectPassFn:
+    PROJECT_PASSES.append(fn)
+    return fn
+
+
+def collect_files(paths: Iterable[str],
+                  include_tests: bool = False) -> List[str]:
+    excludes = set(DEFAULT_EXCLUDE_DIRS)
+    if include_tests:
+        excludes -= {"tests", "analysis_fixtures"}
+    out: List[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                out.append(path)
+            continue
+        for dirpath, dirnames, filenames in os.walk(path):
+            dirnames[:] = sorted(d for d in dirnames if d not in excludes)
+            out.extend(os.path.join(dirpath, f) for f in sorted(filenames)
+                       if f.endswith(".py"))
+    return sorted(dict.fromkeys(out))
+
+
+def _load_passes() -> None:
+    # import for side effect: modules register their passes on import
+    from repro.analysis import determinism, kernel_contract, recompile  # noqa: F401
+
+
+def run_paths(paths: Iterable[str], include_tests: bool = False
+              ) -> Tuple[List[Finding], List[FileContext]]:
+    """Run every registered pass; returns (findings, contexts).
+
+    Inline-suppressed findings are dropped here; reason-less suppressions
+    surface as SUP001. Baseline filtering is the CLI's job (it needs line
+    text for fingerprints — see ``__main__``)."""
+    _load_passes()
+    findings: List[Finding] = []
+    ctxs: List[FileContext] = []
+    for path in collect_files(paths, include_tests=include_tests):
+        try:
+            ctx = FileContext.from_path(path)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding(
+                rule="ANA000", slug="parse-error",
+                path=path.replace(os.sep, "/"),
+                line=getattr(e, "lineno", 1) or 1,
+                message=f"file does not parse: {e}"))
+            continue
+        ctxs.append(ctx)
+    for ctx in ctxs:
+        for line, slug in ctx.suppressions.missing_reasons():
+            findings.append(Finding(
+                rule="SUP001", slug="suppression-reason", path=ctx.path,
+                line=line,
+                message=(f"suppression 'allow-{slug}' carries no reason — "
+                         f"append one: # repro: allow-{slug} -- <why>")))
+        for pass_fn in FILE_PASSES:
+            findings.extend(pass_fn(ctx))
+    for pass_fn in PROJECT_PASSES:
+        findings.extend(pass_fn(ctxs))
+    by_path = {c.path: c for c in ctxs}
+    kept = []
+    for f in findings:
+        ctx = by_path.get(f.path)
+        if f.rule != "SUP001" and ctx is not None \
+                and ctx.suppressions.covers(f.slug, f.line):
+            continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept, ctxs

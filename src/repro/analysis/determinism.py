@@ -1,0 +1,202 @@
+"""Determinism passes (DET001–DET004).
+
+The fleet simulator's byte-identical replays and the serving layer's
+bit-parity guarantees only hold if no code path reads ambient
+nondeterminism. These passes flag the four ways it leaks in:
+
+DET001 ``wallclock``            any wall-clock read (``time.time`` /
+    ``perf_counter`` / ``monotonic`` / ``datetime.now`` …) outside
+    ``repro/clock.py``. Timestamps must flow through ``repro.clock.now()``
+    so they virtualize under ``use_clock``; genuine interval measurement
+    (benchmarks) suppresses with a written reason.
+DET002 ``unseeded-rng``         global-state RNG (``random.*``,
+    ``np.random.*``), ``random.Random()`` / ``default_rng()`` without a
+    seed, and inline magic-constant ``jax.random.PRNGKey(<literal>)``
+    outside tests — constant keys buried in function bodies silently pin
+    (or worse, collide) streams; thread a ``seed`` parameter or hoist a
+    named module-level seed. Keys built inside ``jax.eval_shape`` are
+    exempt (shape-only, never executed).
+DET003 ``unordered-iteration``  iterating a set (hash order) or an
+    unsorted ``os.listdir``/``glob`` result — order feeds event heaps and
+    scheduler admission, so it must be explicit.
+DET004 ``host-sync``            ``.item()`` / ``float()`` / ``np.asarray``
+    / ``jax.device_get`` on traced values inside jit-decorated functions —
+    a concretization error at best, a silent device sync at worst.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.core import FileContext, file_pass, iter_jit_functions
+from repro.analysis.findings import Finding
+
+WALLCLOCK_CALLS = {
+    "time.time", "time.time_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+GLOBAL_RANDOM_CALLS = {
+    f"random.{fn}" for fn in (
+        "random", "randint", "randrange", "uniform", "choice", "choices",
+        "shuffle", "sample", "gauss", "normalvariate", "betavariate",
+        "expovariate", "seed", "getrandbits")
+}
+GLOBAL_NP_RANDOM_CALLS = {
+    f"numpy.random.{fn}" for fn in (
+        "rand", "randn", "randint", "random", "random_sample", "choice",
+        "shuffle", "permutation", "normal", "uniform", "seed", "exponential",
+        "poisson", "binomial")
+}
+
+FS_ORDER_CALLS = {"os.listdir", "os.scandir", "glob.glob", "glob.iglob"}
+
+ORDER_SINKS = {"sorted", "min", "max", "sum", "len", "set", "frozenset",
+               "any", "all"}
+
+SHAPE_ATTRS = {"shape", "ndim", "size", "dtype", "sharding"}
+
+
+def _is_test_file(ctx: FileContext) -> bool:
+    parts = ctx.path.split("/")
+    if "analysis_fixtures" in parts:      # deliberately-bad fixture snippets
+        return False
+    name = parts[-1]
+    return ("tests" in parts
+            or name.startswith("test_") or name == "conftest.py")
+
+
+def _is_clock_module(ctx: FileContext) -> bool:
+    return ctx.path.endswith("repro/clock.py") or ctx.path.endswith("/clock.py")
+
+
+# ------------------------------------------------------------------ #
+@file_pass
+def det001_wallclock(ctx: FileContext) -> Iterator[Finding]:
+    if _is_clock_module(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        q = ctx.call_qualified(node)
+        if q in WALLCLOCK_CALLS:
+            yield ctx.finding(
+                "DET001", "wallclock", node,
+                f"wall-clock read {q}() outside repro/clock.py — stamp via "
+                f"repro.clock.now() (virtualizable under use_clock), or "
+                f"suppress with a reason for true interval measurement")
+
+
+# ------------------------------------------------------------------ #
+def _inside_eval_shape(ctx: FileContext, node: ast.AST) -> bool:
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, ast.Call) \
+                and ctx.qualified(anc.func) == "jax.eval_shape":
+            return True
+    return False
+
+
+@file_pass
+def det002_unseeded_rng(ctx: FileContext) -> Iterator[Finding]:
+    if _is_test_file(ctx):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = ctx.qualified(node.func)
+        if q in GLOBAL_RANDOM_CALLS or q in GLOBAL_NP_RANDOM_CALLS:
+            yield ctx.finding(
+                "DET002", "unseeded-rng", node,
+                f"{q}() uses interpreter-global RNG state — construct a "
+                f"seeded random.Random(seed) / np.random.default_rng(seed) "
+                f"or use jax.random with an explicit key")
+        elif q in {"random.Random", "numpy.random.default_rng",
+                   "numpy.random.RandomState"} \
+                and not node.args and not node.keywords:
+            yield ctx.finding(
+                "DET002", "unseeded-rng", node,
+                f"{q}() constructed without a seed — pass one explicitly")
+        elif q in {"jax.random.PRNGKey", "jax.random.key"} and node.args \
+                and isinstance(node.args[0], ast.Constant) \
+                and not _inside_eval_shape(ctx, node):
+            yield ctx.finding(
+                "DET002", "unseeded-rng", node,
+                f"inline constant {q}({node.args[0].value!r}) — thread a "
+                f"seed parameter (default may keep the same value) or hoist "
+                f"a named module-level seed constant")
+
+
+# ------------------------------------------------------------------ #
+def _is_set_expr(ctx: FileContext, node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return ctx.call_qualified(node) in {"set", "frozenset"}
+
+
+@file_pass
+def det003_unordered_iteration(ctx: FileContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        iters: List[ast.AST] = []
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            iters.append(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            iters.extend(gen.iter for gen in node.generators)
+        for it in iters:
+            if _is_set_expr(ctx, it):
+                yield ctx.finding(
+                    "DET003", "unordered-iteration", it,
+                    "iteration over a set follows hash order, which varies "
+                    "across processes — wrap in sorted(...) before feeding "
+                    "event/scheduling state")
+        q = ctx.call_qualified(node)
+        if q in FS_ORDER_CALLS:
+            parent = ctx.parent(node)
+            sunk = (isinstance(parent, ast.Call)
+                    and ctx.qualified(parent.func) in ORDER_SINKS)
+            if not sunk:
+                yield ctx.finding(
+                    "DET003", "unordered-iteration", node,
+                    f"{q}() order is filesystem-dependent — wrap in "
+                    f"sorted(...) before iterating")
+
+
+# ------------------------------------------------------------------ #
+def _mentions_shape(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr in SHAPE_ATTRS
+               for n in ast.walk(node))
+
+
+@file_pass
+def det004_host_sync(ctx: FileContext) -> Iterator[Finding]:
+    for fn, traced in iter_jit_functions(ctx):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            q = ctx.qualified(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                yield ctx.finding(
+                    "DET004", "host-sync", node,
+                    ".item() inside a jit-traced function forces a host "
+                    "sync / concretization — return the array instead")
+            elif q in {"numpy.asarray", "numpy.array", "jax.device_get"}:
+                yield ctx.finding(
+                    "DET004", "host-sync", node,
+                    f"{q}() inside a jit-traced function pulls the value "
+                    f"to host — use jnp equivalents on the traced side")
+            elif q in {"float", "int", "bool"} and node.args \
+                    and not isinstance(node.args[0], ast.Constant) \
+                    and not _mentions_shape(node.args[0]) \
+                    and _references(node.args[0], traced):
+                yield ctx.finding(
+                    "DET004", "host-sync", node,
+                    f"{q}() on a traced value concretizes at trace time — "
+                    f"keep it an array (jnp.float32(...)) or mark the "
+                    f"argument static")
+
+
+def _references(node: ast.AST, names: Set[str]) -> bool:
+    return any(isinstance(n, ast.Name) and n.id in names
+               for n in ast.walk(node))

@@ -1,0 +1,119 @@
+"""Finding / suppression / baseline model for ``repro.analysis``.
+
+A ``Finding`` is one structured diagnostic: rule id, slug, path:line,
+message, severity. Findings can be silenced two ways, both auditable:
+
+* **inline suppression** — ``# repro: allow-<slug> -- <reason>`` on the
+  offending line or the line directly above it. The reason is mandatory:
+  a suppression without one raises ``SUP001`` (itself an error), so every
+  silenced diagnostic carries a written justification in the tree.
+* **committed baseline** — ``analysis_baseline.json`` fingerprints known
+  findings so CI gates on *new* violations only. Fingerprints hash the
+  rule, path and normalized line text (not the line number), so unrelated
+  edits above a grandfathered finding do not churn the baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+SEVERITIES = ("error", "warning")
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*allow-([A-Za-z0-9_-]+)"      # slug
+    r"(?:\s*(?:--|—|:)\s*(\S.*?))?\s*$")   # optional reason
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                 # stable id, e.g. "DET001"
+    slug: str                 # suppression name, e.g. "wallclock"
+    path: str                 # posix path as scanned (repo-relative in CI)
+    line: int                 # 1-based
+    message: str
+    severity: str = "error"
+
+    def key(self) -> Tuple[str, str, int]:
+        return (self.path, self.rule, self.line)
+
+    def fingerprint(self, line_text: str = "") -> str:
+        basis = f"{self.rule}|{self.path}|{line_text.strip()}"
+        return hashlib.sha256(basis.encode()).hexdigest()[:16]
+
+    def to_dict(self, line_text: str = "") -> Dict[str, object]:
+        return {
+            "rule": self.rule, "slug": self.slug, "path": self.path,
+            "line": self.line, "message": self.message,
+            "severity": self.severity,
+            "fingerprint": self.fingerprint(line_text),
+        }
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} [{self.slug}] "
+                f"{self.severity}: {self.message}")
+
+
+class SuppressionIndex:
+    """Per-file index of ``# repro: allow-<slug>`` comments.
+
+    A suppression covers its own line and the line below it (so it can sit
+    on a comment line above a long statement). ``unsuppressed`` findings
+    for reason-less suppressions are produced by ``missing_reasons()``.
+    """
+
+    def __init__(self, source: str):
+        self._by_line: Dict[int, List[Tuple[str, Optional[str]]]] = {}
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = SUPPRESS_RE.search(text)
+            if m:
+                self._by_line.setdefault(i, []).append((m.group(1),
+                                                        m.group(2)))
+
+    def covers(self, slug: str, line: int) -> bool:
+        for at in (line, line - 1):
+            for s, _reason in self._by_line.get(at, ()):
+                if s == slug or s == "all":
+                    return True
+        return False
+
+    def missing_reasons(self) -> List[Tuple[int, str]]:
+        out = []
+        for line, entries in sorted(self._by_line.items()):
+            for slug, reason in entries:
+                if not reason:
+                    out.append((line, slug))
+        return out
+
+
+# ------------------------------------------------------------------ #
+# Baseline (committed, so CI gates on *new* findings)
+# ------------------------------------------------------------------ #
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: str) -> Dict[str, Dict[str, object]]:
+    """fingerprint -> entry. Missing file == empty baseline."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"unsupported baseline version {data.get('version')!r} in {path}"
+            f" (expected {BASELINE_VERSION})")
+    return {e["fingerprint"]: e for e in data.get("entries", [])}
+
+
+def write_baseline(path: str,
+                   findings: Iterable[Tuple[Finding, str]]) -> None:
+    """``findings`` pairs each Finding with its source line text."""
+    entries = [dict(f.to_dict(text)) for f, text in findings]
+    entries.sort(key=lambda e: (e["path"], e["rule"], e["line"]))
+    with open(path, "w") as f:
+        json.dump({"version": BASELINE_VERSION, "entries": entries},
+                  f, indent=1, sort_keys=True)
+        f.write("\n")

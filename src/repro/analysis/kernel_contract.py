@@ -1,0 +1,457 @@
+"""Kernel-contract passes (KC0xx dispatch, KC1xx BlockSpec, KC2xx int8,
+KC3xx verify family + parity tests).
+
+Every kernel the ``Backend`` registry exposes is a three-legged contract:
+the backend *method* (the API), a pure-jnp *ref oracle* in
+``kernels/ref.py`` (the semantics), and a Pallas *kernel module* (the fast
+path), all signature-compatible and allclose-tested. These passes verify
+the contract statically, from the AST alone — no jax import, no tracing:
+
+KC001/KC002   every ``Backend`` subclass implements every abstract method,
+              with the same arity.
+KC003/KC004   every ref-dispatching method resolves to a function that
+              exists in the sibling ``kernels/ref.py`` with a matching
+              positional signature.
+KC005/KC006   every Pallas-dispatching method resolves to a kernel module
+              function with matching positional arity and an
+              ``interpret`` keyword (CPU debuggability is part of the
+              contract).
+KC101–KC103   ``pl.BlockSpec`` consistency: index-map output rank ==
+              block-shape rank; index-map arity matches the module's grid
+              rank (+ scalar-prefetch count); block-table subscripts in
+              index maps are clamped (``jnp.maximum(tabs[b, m], 0)``) so
+              ``-1`` entries hit the reserved trash block, never OOB.
+KC201         int8 payloads travel with their scales: ``*_i8``/``*_int8``
+              params (and ``*_pool`` params of q-variants) must pair with
+              a ``*_s``/``*_scale`` param in the same signature.
+KC301/KC302   the model-level verify family (spec decode) keeps its
+              dense/paged signatures aligned, and each kernel family's
+              parity test exists and actually names the kernels it covers.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import FileContext, file_pass, project_pass
+from repro.analysis.findings import Finding
+
+SLUG = "kernel-contract"
+
+CLAMP_CALLS = {"jax.numpy.maximum", "jax.numpy.clip", "jax.numpy.where"}
+
+# kernel family -> (parity test relpath, names the test must mention)
+PARITY_TESTS = {
+    "decode": ("tests/test_kernels.py", ("qdecode",)),
+    "paged_attn": ("tests/test_paged_attention.py",
+                   ("paged_decode", "paged_qdecode")),
+    "qmatmul": ("tests/test_kernels.py",
+                ("qmatmul_static", "qmatmul_dynamic", "quantize_weights")),
+    "verify": ("tests/test_spec_decode.py", ("verify_step",)),
+}
+
+# backend method -> family (anything unmatched lands in "other")
+METHOD_FAMILY = {
+    "qdecode": "decode",
+    "paged_decode": "paged_attn",
+    "paged_qdecode": "paged_attn",
+    "qmatmul_static": "qmatmul",
+    "qmatmul_dynamic": "qmatmul",
+    "quantize_weights": "qmatmul",
+}
+
+VERIFY_KERNELS = ("gqa_verify", "mla_verify")       # + "_paged" twins
+
+
+def _positional_params(fn: ast.FunctionDef, drop_self: bool = False
+                       ) -> List[str]:
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    if drop_self and params and params[0] in ("self", "cls"):
+        params = params[1:]
+    return params
+
+
+def _kwonly_params(fn: ast.FunctionDef) -> Set[str]:
+    return {a.arg for a in fn.args.kwonlyargs}
+
+
+def _class_methods(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, ast.FunctionDef)
+            and not n.name.startswith("__")}
+
+
+def _raises_not_implemented(fn: ast.FunctionDef) -> bool:
+    return any(isinstance(n, ast.Raise)
+               and "NotImplementedError" in ast.dump(n)
+               for n in ast.walk(fn))
+
+
+def _dispatch_target(ctx: FileContext, fn: ast.FunctionDef
+                     ) -> Optional[Tuple[str, str, int]]:
+    """(kernels submodule, function name, n positional args forwarded) of
+    the ``return <mod>.<fn>(...)`` dispatch call, resolved through the
+    file's imports — matches any ``*.kernels.<mod>.<fn>`` origin."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Return) \
+                or not isinstance(node.value, ast.Call):
+            continue
+        q = ctx.qualified(node.value.func)
+        if not q or ".kernels." not in q:
+            continue
+        tail = q.split(".kernels.", 1)[1].split(".")
+        if len(tail) == 2:
+            return tail[0], tail[1], len(node.value.args)
+    return None
+
+
+def _module_functions(path: str) -> Optional[Dict[str, ast.FunctionDef]]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            tree = ast.parse(f.read(), filename=path)
+    except (OSError, SyntaxError):
+        return None
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+# ------------------------------------------------------------------ #
+# KC0xx — Backend registry dispatch contract
+# ------------------------------------------------------------------ #
+@project_pass
+def kc0_backend_dispatch(ctxs: List[FileContext]) -> Iterator[Finding]:
+    for ctx in ctxs:
+        if not ctx.path.endswith("api/backends.py"):
+            continue
+        classes = {n.name: n for n in ctx.tree.body
+                   if isinstance(n, ast.ClassDef)}
+        base = classes.get("Backend")
+        if base is None:
+            yield ctx.finding("KC001", SLUG, ctx.tree,
+                              "no Backend base class found")
+            continue
+        abstract = {name: fn for name, fn in _class_methods(base).items()
+                    if _raises_not_implemented(fn)}
+        kernels_dir = os.path.join(
+            os.path.dirname(os.path.dirname(ctx.path)), "kernels")
+        ref_fns = _module_functions(os.path.join(kernels_dir, "ref.py"))
+
+        for cls in classes.values():
+            if cls is base or not any(
+                    isinstance(b, ast.Name) and b.id == "Backend"
+                    for b in cls.bases):
+                continue
+            methods = _class_methods(cls)
+            for name, afn in abstract.items():
+                want = _positional_params(afn, drop_self=True)
+                impl = methods.get(name)
+                if impl is None:
+                    yield ctx.finding(
+                        "KC001", SLUG, cls,
+                        f"{cls.name} does not implement Backend.{name} — "
+                        f"every registered backend must cover all "
+                        f"primitives")
+                    continue
+                got = _positional_params(impl, drop_self=True)
+                if len(got) != len(want):
+                    yield ctx.finding(
+                        "KC002", SLUG, impl,
+                        f"{cls.name}.{name} takes {len(got)} args "
+                        f"({', '.join(got)}) but Backend.{name} declares "
+                        f"{len(want)} ({', '.join(want)})")
+                    continue
+                target = _dispatch_target(ctx, impl)
+                if target is None:
+                    continue
+                mod, fname, n_forwarded = target
+                if n_forwarded != len(want):
+                    yield ctx.finding(
+                        "KC002", SLUG, impl,
+                        f"{cls.name}.{name} forwards {n_forwarded} "
+                        f"positional args to {mod}.{fname} but declares "
+                        f"{len(want)}")
+                if mod == "ref":
+                    yield from _check_ref_oracle(ctx, impl, cls.name, name,
+                                                 fname, want, ref_fns)
+                else:
+                    yield from _check_kernel_impl(ctx, impl, cls.name, name,
+                                                  fname, want,
+                                                  os.path.join(
+                                                      kernels_dir,
+                                                      f"{mod}.py"), mod)
+
+
+def _check_ref_oracle(ctx, impl, cls_name, method, fname, want, ref_fns
+                      ) -> Iterator[Finding]:
+    if ref_fns is None:
+        yield ctx.finding("KC003", SLUG, impl,
+                          f"{cls_name}.{method} dispatches to kernels/ref.py "
+                          f"which is missing or unparseable")
+        return
+    ref = ref_fns.get(fname)
+    if ref is None:
+        yield ctx.finding(
+            "KC003", SLUG, impl,
+            f"ref oracle {fname}() for Backend.{method} not found in "
+            f"kernels/ref.py — every kernel needs its allclose target")
+        return
+    got = _positional_params(ref)
+    if len(got) != len(want):
+        yield ctx.finding(
+            "KC004", SLUG, impl,
+            f"ref oracle {fname}({', '.join(got)}) disagrees with "
+            f"Backend.{method}({', '.join(want)}) on positional arity")
+
+
+def _check_kernel_impl(ctx, impl, cls_name, method, fname, want, path, mod
+                       ) -> Iterator[Finding]:
+    fns = _module_functions(path)
+    if fns is None or fname not in fns:
+        yield ctx.finding(
+            "KC005", SLUG, impl,
+            f"Pallas kernel {mod}.{fname}() for Backend.{method} not found "
+            f"in kernels/{mod}.py")
+        return
+    kfn = fns[fname]
+    got = _positional_params(kfn)
+    if len(got) != len(want):
+        yield ctx.finding(
+            "KC006", SLUG, impl,
+            f"kernel {mod}.{fname}({', '.join(got)}) disagrees with "
+            f"Backend.{method}({', '.join(want)}) on positional arity")
+    if "interpret" not in _kwonly_params(kfn):
+        yield ctx.finding(
+            "KC006", SLUG, impl,
+            f"kernel {mod}.{fname}() lacks the keyword-only 'interpret' "
+            f"flag — CPU interpret mode is part of the backend contract")
+
+
+# ------------------------------------------------------------------ #
+# KC1xx — BlockSpec grid / index-map consistency
+# ------------------------------------------------------------------ #
+def _module_grids(ctx: FileContext) -> List[Tuple[int, int]]:
+    """(grid rank, scalar-prefetch count) per pallas_call / grid spec."""
+    grids: List[Tuple[int, int]] = []
+    for node in ast.walk(ctx.tree):
+        q = ctx.call_qualified(node)
+        if not q:
+            continue
+        if q.endswith(".pallas_call") or q.endswith("PrefetchScalarGridSpec"):
+            rank, prefetch = None, 0
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    if isinstance(kw.value, ast.Tuple):
+                        rank = len(kw.value.elts)
+                    else:
+                        rank = 1
+                elif kw.arg == "num_scalar_prefetch" \
+                        and isinstance(kw.value, ast.Constant):
+                    prefetch = int(kw.value.value)
+            if rank is not None:
+                grids.append((rank, prefetch))
+    return grids
+
+
+@file_pass
+def kc1_blockspecs(ctx: FileContext) -> Iterator[Finding]:
+    grids = _module_grids(ctx)
+    arities = {r for r, _ in grids} | {r + p for r, p in grids if p}
+    prefetch_by_arity = {r + p: p for r, p in grids if p}
+    for node in ast.walk(ctx.tree):
+        q = ctx.call_qualified(node)
+        if not q or not q.endswith(".BlockSpec"):
+            continue
+        shape = node.args[0] if node.args else None
+        index_map = node.args[1] if len(node.args) > 1 else None
+        for kw in node.keywords:
+            if kw.arg == "index_map":
+                index_map = kw.value
+        if not isinstance(shape, ast.Tuple) \
+                or not isinstance(index_map, ast.Lambda):
+            continue
+        body = index_map.body
+        out_rank = len(body.elts) if isinstance(body, ast.Tuple) else 1
+        if out_rank != len(shape.elts):
+            yield ctx.finding(
+                "KC101", SLUG, node,
+                f"BlockSpec block shape has rank {len(shape.elts)} but its "
+                f"index map returns {out_rank} indices — the pipeline "
+                f"would mis-slice the operand")
+        lam_params = [a.arg for a in index_map.args.args]
+        if arities and len(lam_params) not in arities:
+            yield ctx.finding(
+                "KC102", SLUG, node,
+                f"index map takes {len(lam_params)} args "
+                f"({', '.join(lam_params)}) but this module's grids imply "
+                f"{sorted(arities)} (grid rank + scalar-prefetch refs)")
+            continue
+        n_prefetch = prefetch_by_arity.get(len(lam_params), 0)
+        if n_prefetch:
+            prefetch_names = set(lam_params[-n_prefetch:])
+            yield from _check_clamped(ctx, node, index_map, prefetch_names)
+
+
+def _check_clamped(ctx, spec_node, index_map, prefetch_names
+                   ) -> Iterator[Finding]:
+    clamped_subtrees: List[ast.AST] = [
+        n for n in ast.walk(index_map.body)
+        if isinstance(n, ast.Call) and ctx.qualified(n.func) in CLAMP_CALLS]
+    covered = {id(d) for c in clamped_subtrees for d in ast.walk(c)}
+    for n in ast.walk(index_map.body):
+        if isinstance(n, ast.Subscript) and id(n) not in covered \
+                and isinstance(n.value, ast.Name) \
+                and n.value.id in prefetch_names:
+            yield ctx.finding(
+                "KC103", SLUG, spec_node,
+                f"index map reads block table {n.value.id!r} without "
+                f"clamping — unallocated entries are -1 and must route to "
+                f"the reserved trash block: jnp.maximum({n.value.id}[...], "
+                f"0)")
+
+
+# ------------------------------------------------------------------ #
+# KC201 — int8 payload/scale pairing
+# ------------------------------------------------------------------ #
+_PAIR_SUFFIXES = (("_i8", ("_s", "_scale")), ("_int8", ("_scale", "_s")))
+
+
+@file_pass
+def kc2_int8_pairs(ctx: FileContext) -> Iterator[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        params = set(_positional_params(node, drop_self=True))
+        is_q_variant = "qdecode" in node.name or "paged_q" in node.name \
+            or "qmatmul" in node.name
+        for p in sorted(params):
+            for suffix, scale_suffixes in _PAIR_SUFFIXES:
+                if p.endswith(suffix):
+                    base = p[:-len(suffix)]
+                    if not any(base + s in params for s in scale_suffixes):
+                        yield ctx.finding(
+                            "KC201", SLUG, node,
+                            f"{node.name}() takes int8 payload {p!r} with "
+                            f"no matching scale param "
+                            f"({base}_scale / {base}_s) — int8 tensors "
+                            f"must travel with their dequant scales")
+            if is_q_variant and p.endswith("_pool"):
+                base = p[:-len("_pool")]
+                if base + "_scale" not in params:
+                    yield ctx.finding(
+                        "KC201", SLUG, node,
+                        f"{node.name}() is an int8 variant but pool param "
+                        f"{p!r} has no {base}_scale — payload/scale pools "
+                        f"must stay paired")
+
+
+# ------------------------------------------------------------------ #
+# KC3xx — verify family + parity-test coverage
+# ------------------------------------------------------------------ #
+@project_pass
+def kc3_verify_and_parity(ctxs: List[FileContext]) -> Iterator[Finding]:
+    attention = next((c for c in ctxs
+                      if c.path.endswith("models/attention.py")), None)
+    if attention is not None:
+        fns = {n.name: n for n in attention.tree.body
+               if isinstance(n, ast.FunctionDef)}
+        for base_name in VERIFY_KERNELS:
+            dense, paged = fns.get(base_name), fns.get(base_name + "_paged")
+            for name, fn in ((base_name, dense),
+                             (base_name + "_paged", paged)):
+                if fn is None:
+                    yield attention.finding(
+                        "KC301", SLUG, attention.tree,
+                        f"verify kernel {name}() missing from "
+                        f"models/attention.py — the spec-decode verify "
+                        f"family must keep dense and paged twins")
+            if dense is None or paged is None:
+                continue
+            dp = _positional_params(dense)
+            pp = _positional_params(paged)
+            if len(pp) != len(dp) + 1 or "tables" not in pp:
+                yield attention.finding(
+                    "KC301", SLUG, paged,
+                    f"{base_name}_paged({', '.join(pp)}) must match "
+                    f"{base_name}({', '.join(dp)}) plus a 'tables' param — "
+                    f"the engine swaps them by cache kind")
+
+    backends = next((c for c in ctxs
+                     if c.path.endswith("api/backends.py")), None)
+    root = _repo_root(backends.path) if backends is not None else None
+    if root is None:
+        return
+    for family, (relpath, names) in sorted(PARITY_TESTS.items()):
+        test_path = os.path.join(root, relpath)
+        try:
+            with open(test_path, encoding="utf-8") as f:
+                text = f.read()
+        except OSError:
+            yield backends.finding(
+                "KC302", SLUG, backends.tree,
+                f"parity test {relpath} for kernel family {family!r} does "
+                f"not exist")
+            continue
+        for name in names:
+            if name not in text:
+                yield backends.finding(
+                    "KC302", SLUG, backends.tree,
+                    f"parity test {relpath} never mentions {name!r} — the "
+                    f"{family!r} kernel family has no ref-vs-kernel "
+                    f"coverage")
+
+
+def _repo_root(backends_path: str) -> Optional[str]:
+    """Nearest ancestor of api/backends.py that has a tests/ dir (absent
+    for fixture corpora — parity checks are skipped there)."""
+    cur = os.path.dirname(os.path.abspath(backends_path))
+    for _ in range(8):
+        if os.path.isdir(os.path.join(cur, "tests")):
+            return cur
+        nxt = os.path.dirname(cur)
+        if nxt == cur:
+            break
+        cur = nxt
+    return None
+
+
+# ------------------------------------------------------------------ #
+# Coverage table (for --json artifacts and DESIGN.md)
+# ------------------------------------------------------------------ #
+def contract_coverage(ctxs: List[FileContext]) -> Dict[str, Dict[str, object]]:
+    """kernel family -> {backend methods, ref oracles, kernel modules,
+    parity test} as actually wired in api/backends.py."""
+    table: Dict[str, Dict[str, object]] = {}
+    for ctx in ctxs:
+        if not ctx.path.endswith("api/backends.py"):
+            continue
+        classes = {n.name: n for n in ctx.tree.body
+                   if isinstance(n, ast.ClassDef)}
+        for cls in classes.values():
+            for name, impl in _class_methods(cls).items():
+                target = _dispatch_target(ctx, impl)
+                if target is None:
+                    continue
+                mod, fname, _ = target
+                family = METHOD_FAMILY.get(name, "other")
+                entry = table.setdefault(family, {
+                    "backend_methods": [], "ref_oracles": [],
+                    "kernel_modules": [],
+                    "parity_test": PARITY_TESTS.get(family, ("", ()))[0]})
+                if name not in entry["backend_methods"]:
+                    entry["backend_methods"].append(name)
+                if mod == "ref" and fname not in entry["ref_oracles"]:
+                    entry["ref_oracles"].append(fname)
+                elif mod != "ref" and mod not in entry["kernel_modules"]:
+                    entry["kernel_modules"].append(mod)
+    for ctx in ctxs:
+        if ctx.path.endswith("models/attention.py"):
+            names = [n.name for n in ctx.tree.body
+                     if isinstance(n, ast.FunctionDef)
+                     and any(n.name.startswith(v) for v in VERIFY_KERNELS)]
+            if names:
+                table["verify"] = {
+                    "backend_methods": [],
+                    "ref_oracles": sorted(names),
+                    "kernel_modules": ["models/attention.py (jnp core)"],
+                    "parity_test": PARITY_TESTS["verify"][0]}
+    return table

@@ -1,0 +1,87 @@
+"""Recompile-guard static passes (REC001–REC002).
+
+PR 4's serving invariant is *one compile per pow2 bucket*: jit entry
+points must retrace only when a shape bucket changes, never per request.
+The two ways Python code silently breaks that:
+
+REC001 ``traced-branch``  ``if``/``while``/ternary conditioned on a traced
+    parameter's *value*. Under ``jax.jit`` this raises a concretization
+    error; where the value sneaks in as a weak-typed Python scalar it
+    instead recompiles per distinct value. Branch on shapes (static per
+    trace) or use ``lax.cond`` / ``jnp.where``.
+REC002 ``traced-shape``   a traced parameter used as a Python loop bound
+    (``range(n)``) or as an array *shape* (``jnp.zeros((n, …))``) — each
+    distinct value compiles a new executable. Pad to a bucket
+    (``pow2_bucket``) or mark the argument static.
+
+The runtime complement lives in ``repro.analysis.retrace``: a ``jax.jit``
+auditor that counts compiled variants per entry point and asserts the
+bucket invariant in an opt-in test.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.core import FileContext, file_pass, iter_jit_functions
+from repro.analysis.determinism import SHAPE_ATTRS
+from repro.analysis.findings import Finding
+
+SHAPE_CTORS = {
+    "jax.numpy.zeros", "jax.numpy.ones", "jax.numpy.full", "jax.numpy.empty",
+    "jax.numpy.arange", "jax.numpy.eye", "jax.numpy.linspace",
+    "jax.ShapeDtypeStruct",
+}
+
+
+def _value_refs(ctx: FileContext, node: ast.AST, traced: Set[str]
+                ) -> Iterator[ast.Name]:
+    """Bare references to traced params — a Name under a ``.shape``-like
+    attribute is static per trace and exempt."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id in traced:
+            parent = ctx.parent(n)
+            if isinstance(parent, ast.Attribute) \
+                    and parent.attr in SHAPE_ATTRS:
+                continue
+            yield n
+
+
+@file_pass
+def rec001_traced_branch(ctx: FileContext) -> Iterator[Finding]:
+    for fn, traced in iter_jit_functions(ctx):
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                for ref in _value_refs(ctx, node.test, traced):
+                    yield ctx.finding(
+                        "REC001", "traced-branch", node,
+                        f"branch on traced parameter {ref.id!r} inside a "
+                        f"jit function — concretization error or per-value "
+                        f"retrace; use lax.cond/jnp.where or mark "
+                        f"{ref.id!r} static")
+                    break
+
+
+@file_pass
+def rec002_traced_shape(ctx: FileContext) -> Iterator[Finding]:
+    for fn, traced in iter_jit_functions(ctx):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            q = ctx.qualified(node.func)
+            if q == "range" and node.args:
+                for ref in _value_refs(ctx, node.args[0], traced):
+                    yield ctx.finding(
+                        "REC002", "traced-shape", node,
+                        f"Python loop bound on traced parameter {ref.id!r} "
+                        f"— unrolls/retraces per value; use lax.fori_loop "
+                        f"or mark it static")
+                    break
+            elif q in SHAPE_CTORS and node.args:
+                for ref in _value_refs(ctx, node.args[0], traced):
+                    yield ctx.finding(
+                        "REC002", "traced-shape", node,
+                        f"array shape depends on traced parameter "
+                        f"{ref.id!r} — one compile per distinct value; pad "
+                        f"to a pow2 bucket or mark it static")
+                    break

@@ -1,0 +1,131 @@
+"""Runtime recompile auditor — the dynamic half of the recompile guard.
+
+The static pass (``repro.analysis.recompile``) catches value-dependent
+shapes in jit code; this module catches what statics cannot: how many
+times each jit entry point *actually* compiled for a given workload.
+``audit_jit()`` patches ``jax.jit`` for a scope, registering every jitted
+function created inside it; ``compiles()`` then reads each function's
+compile-cache size (``_cache_size`` when the runtime exposes it, with a
+per-call abstract-signature count as the fallback), so a test can assert
+the PR-4 invariant directly: decode compiles once per pow2 cache bucket,
+never per request.
+
+    with audit_jit() as audit:
+        session = InferenceSession(params, cfg)       # jits inside scope
+        for toks in workloads:
+            session.generate({"tokens": toks}, n_new)
+    audit.assert_max_compiles(n_buckets)
+
+Opt-in: the accompanying test (``tests/test_retrace.py``) runs only with
+``REPRO_RETRACE_AUDIT=1`` — CI's analysis job sets it.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Dict, Iterator, List, Optional
+
+import jax
+
+
+class _TrackedJit:
+    """One jitted function + the means to count its compiled variants."""
+
+    def __init__(self, name: str, jitted):
+        self.name = name
+        self.jitted = jitted
+        self._signatures: set = set()
+
+    def record_call(self, args, kwargs) -> None:
+        def abstract(x):
+            shape = getattr(x, "shape", None)
+            if shape is None:
+                return repr(x)
+            return (tuple(shape), str(getattr(x, "dtype", "?")))
+
+        try:
+            leaves = jax.tree_util.tree_leaves((args, tuple(sorted(
+                kwargs.items()))))
+            self._signatures.add(tuple(abstract(x) for x in leaves))
+        except TypeError:   # unhashable static arg — fall back to repr
+            self._signatures.add(repr((args, kwargs)))
+
+    def compiles(self) -> int:
+        cache_size = getattr(self.jitted, "_cache_size", None)
+        if callable(cache_size):
+            try:
+                return int(cache_size())
+            except Exception:
+                pass
+        return len(self._signatures)
+
+
+class JitAudit:
+    """Registry of every function jitted while ``audit_jit()`` is active."""
+
+    def __init__(self) -> None:
+        self._tracked: List[_TrackedJit] = []
+
+    def _register(self, name: str, jitted) -> _TrackedJit:
+        t = _TrackedJit(name, jitted)
+        self._tracked.append(t)
+        return t
+
+    def compiles(self) -> Dict[str, int]:
+        """function name -> compiled-variant count (names deduplicated
+        with #i suffixes so two lambdas do not shadow each other)."""
+        out: Dict[str, int] = {}
+        for t in self._tracked:
+            key, i = t.name, 1
+            while key in out:
+                i += 1
+                key = f"{t.name}#{i}"
+            out[key] = t.compiles()
+        return out
+
+    def total_compiles(self) -> int:
+        return sum(t.compiles() for t in self._tracked)
+
+    def assert_max_compiles(self, limit: int,
+                            name: Optional[str] = None) -> None:
+        """Assert no tracked entry point (or the named one) compiled more
+        than ``limit`` distinct variants."""
+        table = self.compiles()
+        offenders = {k: v for k, v in table.items()
+                     if v > limit and (name is None or k.startswith(name))}
+        if offenders:
+            raise AssertionError(
+                f"retrace audit: compile budget {limit} exceeded: "
+                f"{offenders} (full table: {table})")
+
+
+@contextlib.contextmanager
+def audit_jit() -> Iterator[JitAudit]:
+    """Patch ``jax.jit`` so every function jitted in this scope is
+    tracked. Call behaviour is unchanged — the wrapper only records the
+    abstract signature of each call before delegating."""
+    audit = JitAudit()
+    real_jit = jax.jit
+
+    def patched_jit(fun=None, **kw):
+        if fun is None:                        # @jax.jit(static_argnums=…)
+            return functools.partial(patched_jit, **kw)
+        jitted = real_jit(fun, **kw)
+        tracked = audit._register(
+            getattr(fun, "__name__", "<lambda>"), jitted)
+
+        @functools.wraps(fun)
+        def wrapper(*args, **kwargs):
+            tracked.record_call(args, kwargs)
+            return jitted(*args, **kwargs)
+
+        # expose the underlying jitted callable's introspection surface
+        wrapper.lower = getattr(jitted, "lower", None)
+        wrapper._tracked = tracked
+        return wrapper
+
+    jax.jit = patched_jit
+    try:
+        yield audit
+    finally:
+        jax.jit = real_jit

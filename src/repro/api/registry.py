@@ -16,9 +16,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.clock import now
 from repro.models.config import ModelConfig
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
 
@@ -62,13 +62,13 @@ class ArtifactRegistry:
         d = self._dir(name, version, variant)
         manifest = save_checkpoint(d, params, cfg, meta={
             "name": name, "version": version, "variant": variant,
-            "published_at": time.time(), "metrics": metrics or {},
+            "published_at": now(), "metrics": metrics or {},
         })
         ref = ArtifactRef(name, version, variant,
                           manifest["sha256"], manifest["size_bytes"])
         self._index[ref.key] = {
             "sha256": ref.sha256, "size_bytes": ref.size_bytes,
-            "dir": d, "metrics": metrics or {}, "published_at": time.time(),
+            "dir": d, "metrics": metrics or {}, "published_at": now(),
         }
         self._save_index()
         return ref

@@ -10,7 +10,7 @@ static_int8 mode.
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

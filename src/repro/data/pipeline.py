@@ -16,7 +16,6 @@ from typing import Dict, Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.training.loss import IGNORE
@@ -57,6 +56,12 @@ def lm_stream(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
 # --------------------------------------------------------------------- #
 # VQI synthetic dataset (TTPLA-like)
 # --------------------------------------------------------------------- #
+# class centroids are part of the dataset *definition*, not the sampling
+# stream: every caller must see the same clusters, so the seed is a named
+# module constant rather than a threaded parameter.
+CENTROID_SEED = 1234
+
+
 @dataclasses.dataclass(frozen=True)
 class VQITask:
     """Token layout:  [frontend patches] [BOS] -> predict asset, condition."""
@@ -81,7 +86,7 @@ def vqi_batch(key, cfg: ModelConfig, task: VQITask, batch: int
     cond = jax.random.randint(k2, (batch,), 0, task.n_conditions)
 
     # deterministic class centroids in frontend space
-    ckey = jax.random.PRNGKey(1234)
+    ckey = jax.random.PRNGKey(CENTROID_SEED)
     centroids = jax.random.normal(
         ckey, (task.n_assets, task.n_conditions, cfg.frontend_dim)) * 2.0
     mu = centroids[asset, cond]                                    # [B, fd]

@@ -194,14 +194,15 @@ def run_one(arch: str, shape_name: str, mesh_name: str,
         "params": cfg.param_count(),
         "active_params": cfg.param_count(active_only=cfg.n_experts > 0),
     }
-    t0 = time.time()
+    # repro: allow-wallclock -- lower/compile timing is a measured interval
+    t0 = time.perf_counter()
     with jax.set_mesh(mesh):
         jitted, structs = build_lowerable(cfg, shape_name, mesh,
                                           quantized=quantized)
         lowered = jitted.lower(*structs)
-        t1 = time.time()
+        t1 = time.perf_counter()  # repro: allow-wallclock -- interval vs t0
         compiled = lowered.compile()
-        t2 = time.time()
+        t2 = time.perf_counter()  # repro: allow-wallclock -- interval vs t1
         cost = compiled.cost_analysis()
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()

@@ -22,6 +22,8 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for ad-hoc params and request payloads")
     args = ap.parse_args()
 
     from repro import configs as C
@@ -34,7 +36,7 @@ def main():
         params, cfg, _ = load_checkpoint(args.checkpoint)
     else:
         cfg = C.smoke_config(args.arch).with_overrides(dtype="float32")
-        params = init_params(jax.random.PRNGKey(0), cfg)
+        params = init_params(jax.random.PRNGKey(args.seed), cfg)
     if args.quant != "none":
         params, paths = quantize_tree(
             params, QuantConfig(mode=args.quant, min_size=1024))
@@ -48,7 +50,7 @@ def main():
     )
     q = RequestQueue(pipe, max_batch=args.max_batch)
 
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     reqs = []
     for i in range(args.requests):
         key, sub = jax.random.split(key)
@@ -60,9 +62,9 @@ def main():
                 sub, (1, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
         reqs.append(q.submit(payload))
 
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # repro: allow-wallclock -- reported tok/s is real
     q.drain()
-    dt = time.perf_counter() - t0
+    dt = time.perf_counter() - t0  # repro: allow-wallclock -- interval vs t0
     assert all(r.done for r in reqs)
     print(f"served {len(reqs)} requests x {args.new_tokens} new tokens "
           f"in {dt:.2f}s ({len(reqs) * args.new_tokens / dt:.1f} tok/s), "

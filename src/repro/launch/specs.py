@@ -7,7 +7,7 @@ train_4k -> train_step, prefill_32k -> prefill, decode shapes -> decode_step.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

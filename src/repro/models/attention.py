@@ -20,7 +20,6 @@ compressed streams and reuses the dense attention cores.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ cited source paper.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -11,7 +11,6 @@ output shapes — the caller interaction does not change".
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

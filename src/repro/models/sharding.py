@@ -12,11 +12,10 @@ mesh and the 512-chip production mesh.
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 

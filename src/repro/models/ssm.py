@@ -9,7 +9,6 @@ Layout: x [B, L, H, P], B/C [B, L, G, N], dt [B, L, H]; state [B, H, P, N].
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

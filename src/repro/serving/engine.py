@@ -10,12 +10,12 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import decode_step, forward, init_cache, prefill
+from repro.models import decode_step, forward, prefill
 from repro.models.config import ModelConfig
 from repro.serving.kvcache import pow2_bucket
 
@@ -112,8 +112,10 @@ class InferenceSession:
         return call
 
     def logits(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        # repro: allow-wallclock -- stats measure real kernel wall time
         t0 = time.perf_counter()
         out = jax.block_until_ready(self._forward(self.params, batch))
+        # repro: allow-wallclock -- interval vs t0 above (latency stats)
         self.stats.record((time.perf_counter() - t0) * 1e3)
         return out
 

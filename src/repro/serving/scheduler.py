@@ -388,6 +388,7 @@ class ContinuousBatchingEngine:
         never scheduled, counted in ``metrics()["rejected"]``."""
         req = GenRequest(self._next_rid, tokens, max_new_tokens,
                          frontend_embeds, eos_id, out_tokens=[],
+                         # repro: allow-wallclock -- TTFT/e2e gates measure real compute
                          submitted_at=time.perf_counter(),
                          sampling=sampling or SamplingParams(),
                          priority=priority, on_token=on_token)
@@ -654,6 +655,7 @@ class ContinuousBatchingEngine:
     def _record(self, req: GenRequest, token) -> None:
         tok = token.tolist() if hasattr(token, "tolist") else token
         if not req.out_tokens:
+            # repro: allow-wallclock -- TTFT interval vs submitted_at
             req.first_token_at = time.perf_counter()
         req.out_tokens.append(tok)
         if req.on_token is not None:
@@ -661,6 +663,7 @@ class ContinuousBatchingEngine:
         if len(req.out_tokens) >= req.max_new_tokens or _hits_eos(tok, req.eos_id):
             req.done = True
             req.status = "done"
+            # repro: allow-wallclock -- e2e-latency interval vs submitted_at
             req.finished_at = time.perf_counter()
 
     # ---------------------------------------------------------------- #

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator
 
 import jax
 
@@ -15,14 +15,15 @@ from repro.training.train_step import train_step
 def fit(cfg: ModelConfig, oc: OptimizerConfig,
         stream: Iterator[Dict[str, jax.Array]], steps: int,
         params=None, log_every: int = 20,
-        log_fn: Callable[[str], None] = print):
+        log_fn: Callable[[str], None] = print, seed: int = 0):
     """Returns (params, history). CPU-friendly: no sharding, pure jit."""
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     if params is None:
         params = init_params(key, cfg)
     opt_state = adamw_init(params, oc)
     step_fn = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, oc))
     history = []
+    # repro: allow-wallclock -- wall_s logs real train-step throughput
     t0 = time.perf_counter()
     for i in range(steps):
         batch = next(stream)
@@ -30,6 +31,7 @@ def fit(cfg: ModelConfig, oc: OptimizerConfig,
         if i % log_every == 0 or i == steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = i
+            # repro: allow-wallclock -- interval vs t0 above, logging only
             m["wall_s"] = round(time.perf_counter() - t0, 1)
             history.append(m)
             log_fn(f"step {i:5d} loss={m['loss']:.4f} acc={m['token_acc']:.3f} "

@@ -9,7 +9,7 @@ State layout (pytree-of-dicts, same structure as params):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ kimi-k2 / dsv2 MoE dispatch buffers inside v5e HBM at global_batch=256).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

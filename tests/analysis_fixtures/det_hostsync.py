@@ -1,0 +1,21 @@
+"""DET004 fixture: host syncs inside jit-traced functions."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_sync(x):
+    return x.sum().item()               # DET004: .item() inside jit
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bad_pull(x, n):
+    y = np.asarray(x)                   # DET004: pulls traced value to host
+    return y.sum() + float(x[0]) + n    # DET004: float() concretizes
+
+
+@jax.jit
+def good_shape(x):
+    return x.reshape(x.shape[0], -1)    # ok: shape access is static

@@ -1,0 +1,26 @@
+"""DET002 fixture: global-state RNG, unseeded generator, inline constant
+key — plus a threaded seed and an eval_shape key that must NOT fire."""
+import random
+
+import jax
+import numpy as np
+
+
+def roll():
+    return random.random()          # DET002: interpreter-global RNG
+
+
+def gen():
+    return np.random.default_rng()  # DET002: constructed without a seed
+
+
+def key():
+    return jax.random.PRNGKey(42)   # DET002: inline magic-constant key
+
+
+def good(seed: int):
+    return jax.random.PRNGKey(seed)          # ok: threaded seed
+
+
+def shapes():
+    return jax.eval_shape(lambda: jax.random.PRNGKey(0))  # ok: never runs

@@ -1,0 +1,11 @@
+"""DET003 fixture: set iteration and unsorted directory listing — plus a
+sorted() listing that must NOT fire."""
+import os
+
+
+def visit():
+    for item in {1, 2, 3}:                  # DET003: hash-order iteration
+        print(item)
+    names = [n for n in os.listdir(".")]    # DET003: filesystem order
+    ordered = sorted(os.listdir("."))       # ok: order made explicit
+    return names, ordered

@@ -1,0 +1,16 @@
+"""DET001 fixture: one naked wall-clock read, one documented suppression
+(must NOT fire), one reason-less suppression (SUP001)."""
+import time
+
+
+def stamp():
+    return time.time()          # DET001 fires here
+
+
+def measured():
+    # repro: allow-wallclock -- fixture: documented interval measurement
+    return time.perf_counter()  # suppressed with reason: must NOT fire
+
+
+def undocumented():
+    return time.monotonic()  # repro: allow-wallclock

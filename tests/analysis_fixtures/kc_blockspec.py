@@ -1,0 +1,36 @@
+"""KC1xx fixture: BlockSpecs whose index maps disagree with block shapes,
+grids, or the block-table clamp invariant."""
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_rank(x):
+    # KC101: 3-d block shape but the index map returns 2 indices
+    spec = pl.BlockSpec((8, 128, 1), lambda i, j: (i, j))
+    return pl.pallas_call(_kernel, grid=(4, 4),
+                          in_specs=[spec], out_specs=spec,
+                          out_shape=x)(x)
+
+
+def bad_arity(x):
+    # KC102: grids in this module are rank 2 (or 1 + 1 prefetch) but the
+    # index map takes 3 args
+    spec = pl.BlockSpec((8, 128), lambda i, j, k: (i, j))
+    return pl.pallas_call(_kernel, grid=(4, 4),
+                          in_specs=[spec], out_specs=spec,
+                          out_shape=x)(x)
+
+
+def bad_table(x, tabs):
+    # KC103: block-table subscript tabs[m] is not clamped — a -1 entry
+    # (unallocated block) would index out of bounds instead of hitting the
+    # reserved trash block
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(4,),
+        in_specs=[pl.BlockSpec((1, 128), lambda m, tabs: (tabs[m], 0))],
+        out_specs=pl.BlockSpec((1, 128), lambda m, tabs: (m, 0)))
+    return pl.pallas_call(_kernel, grid_spec=grid_spec, out_shape=x)(x, tabs)

@@ -1,0 +1,11 @@
+"""KC201 fixture: int8 payload params travelling without their scales."""
+
+
+def qdecode_missing_scale(q, k_i8, v_i8, v_s):
+    # KC201: k_i8 has no k_s / k_scale partner (v_i8 + v_s is fine)
+    return q, k_i8, v_i8, v_s
+
+
+def paged_qdecode_missing_pool_scale(q, k_pool, tables, pos):
+    # KC201: q-variant pool param without a k_scale partner
+    return q, k_pool, tables, pos

@@ -1,0 +1,45 @@
+"""KC0xx fixture: a deliberately broken Backend registry. Each method of
+BrokenBackend violates one leg of the dispatch contract."""
+from fixkc.kernels import ref as _ref
+
+
+class Backend:
+    name = "base"
+
+    def paged_decode(self, q, pool, tables, pos):
+        raise NotImplementedError
+
+    def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
+        raise NotImplementedError
+
+    def qmatmul_static(self, x, w_i8, w_s):
+        raise NotImplementedError
+
+    def qmatmul_dynamic(self, x, w):
+        raise NotImplementedError
+
+    def quantize_weights(self, w):
+        raise NotImplementedError
+
+
+class BrokenBackend(Backend):
+    name = "broken"
+
+    # KC001: paged_decode is not implemented at all
+
+    def qdecode(self, q, k_i8, k_s, v_i8, v_s):
+        # KC002: 5 positional args where Backend.qdecode declares 6
+        return _ref.qdecode_ref(q, k_i8, k_s, v_i8, v_s)
+
+    def qmatmul_static(self, x, w_i8, w_s):
+        # KC003: kernels/ref.py has no qmatmul_static_ref
+        return _ref.qmatmul_static_ref(x, w_i8, w_s)
+
+    def qmatmul_dynamic(self, x, w):
+        # KC004: qmatmul_dynamic_ref exists but takes 3 args, not 2
+        return _ref.qmatmul_dynamic_ref(x, w)
+
+    def quantize_weights(self, w):
+        # KC005: kernels/quant.py does not exist
+        from fixkc.kernels import quant as _q
+        return _q.quantize_weights(w)

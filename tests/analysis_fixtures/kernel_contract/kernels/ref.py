@@ -1,0 +1,10 @@
+"""Supporting ref-oracle module for the broken-backend fixture: complete
+for qdecode, wrong arity for qmatmul_dynamic, missing qmatmul_static."""
+
+
+def qdecode_ref(q, k_i8, k_s, v_i8, v_s, bias):
+    return q
+
+
+def qmatmul_dynamic_ref(x, w, extra):
+    return x

@@ -1,0 +1,22 @@
+"""REC001/REC002 fixture: value branches and value-dependent shapes inside
+jit functions — plus a shape-based branch that must NOT fire."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_branch(x, limit):
+    if limit > 0:                   # REC001: value branch on traced param
+        x = x + 1
+    total = x.sum()
+    for i in range(limit):          # REC002: traced Python loop bound
+        total = total + i
+    buf = jnp.zeros((limit, 4))     # REC002: traced array shape
+    return total + buf.sum()
+
+
+@jax.jit
+def good_shape(x):
+    if x.shape[0] > 4:              # ok: shapes are static per trace
+        return x[:4]
+    return x

@@ -1,0 +1,188 @@
+"""repro.analysis: fixtures fire exactly the expected rules, the real tree
+is clean, suppressions/baselines gate correctly, and the kernel-contract
+coverage table spans all four families."""
+import collections
+import json
+import os
+
+import pytest
+
+from repro.analysis import run_paths
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.core import FileContext, collect_files
+from repro.analysis.findings import Finding, SuppressionIndex, load_baseline
+from repro.analysis.kernel_contract import contract_coverage
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "analysis_fixtures")
+SRC_PATHS = [os.path.join(REPO, p) for p in ("src", "benchmarks", "scripts")]
+
+# fixture file -> exact multiset of rule ids that must fire in it
+EXPECTED = {
+    "det_wallclock.py": {"DET001": 1, "SUP001": 1},
+    "det_rng.py": {"DET002": 3},
+    "det_setiter.py": {"DET003": 2},
+    "det_hostsync.py": {"DET004": 3},
+    "rec_branch.py": {"REC001": 1, "REC002": 2},
+    "kc_blockspec.py": {"KC101": 1, "KC102": 1, "KC103": 1},
+    "kc_int8.py": {"KC201": 2},
+    "kernel_contract/api/backends.py": {
+        "KC001": 1, "KC002": 1, "KC003": 1, "KC004": 1, "KC005": 1},
+    "kernel_contract/kernels/ref.py": {},       # supporting file: clean
+}
+
+
+def _by_fixture(findings):
+    out = collections.defaultdict(collections.Counter)
+    for f in findings:
+        rel = f.path.split("analysis_fixtures/", 1)[1]
+        out[rel][f.rule] += 1
+    return out
+
+
+# ------------------------------------------------------------------ #
+# Fixtures: each rule fires exactly where planted
+# ------------------------------------------------------------------ #
+def test_fixture_rules_fire_exactly():
+    findings, _ = run_paths([FIXTURES])
+    got = _by_fixture(findings)
+    for rel, want in EXPECTED.items():
+        assert dict(got.get(rel, {})) == want, (
+            f"{rel}: expected {want}, got {dict(got.get(rel, {}))}")
+    assert set(got) <= set(EXPECTED), (
+        f"findings outside known fixtures: {set(got) - set(EXPECTED)}")
+
+
+def test_fixture_cli_exits_nonzero():
+    assert analysis_main([FIXTURES]) == 1
+
+
+# ------------------------------------------------------------------ #
+# Real tree: zero findings (true positives fixed, suppressions reasoned)
+# ------------------------------------------------------------------ #
+def test_src_tree_is_clean():
+    findings, ctxs = run_paths(SRC_PATHS)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert len(ctxs) > 50          # the walk actually scanned the tree
+
+
+def test_src_cli_exits_zero():
+    assert analysis_main(SRC_PATHS) == 0
+
+
+def test_fixture_dir_excluded_from_default_walk():
+    # walking the repo root never descends into tests/ (or fixtures) unless
+    # include_tests is set; an explicit tests path always scans
+    files = collect_files([REPO])
+    assert files and not any("/tests/" in f for f in files)
+    files = collect_files([REPO], include_tests=True)
+    assert any("analysis_fixtures" in f for f in files)
+
+
+# ------------------------------------------------------------------ #
+# Suppressions
+# ------------------------------------------------------------------ #
+def test_suppression_same_line_and_line_above():
+    src = ("import time\n"
+           "t = time.time()  # repro: allow-wallclock -- same-line reason\n"
+           "# repro: allow-wallclock -- line-above reason\n"
+           "u = time.time()\n")
+    idx = SuppressionIndex(src)
+    assert idx.covers("wallclock", 2)
+    assert idx.covers("wallclock", 4)
+    assert not idx.covers("wallclock", 1)
+    assert not idx.covers("unseeded-rng", 2)   # slug-specific
+    assert idx.missing_reasons() == []
+
+
+def test_suppression_without_reason_is_sup001():
+    findings, _ = run_paths(
+        [os.path.join(FIXTURES, "det_wallclock.py")])
+    assert [f.rule for f in findings
+            if f.line == 16] == ["SUP001"]
+    # the reason-less suppression still suppresses DET001 on its line
+    assert not any(f.rule == "DET001" and f.line == 16 for f in findings)
+
+
+# ------------------------------------------------------------------ #
+# Baseline: fingerprints grandfather known findings, new ones still gate
+# ------------------------------------------------------------------ #
+def test_baseline_roundtrip_and_gating(tmp_path):
+    baseline = str(tmp_path / "baseline.json")
+    assert analysis_main([FIXTURES, "--baseline", baseline,
+                          "--update-baseline"]) == 0
+    entries = load_baseline(baseline)
+    assert len(entries) == 23
+    # with everything grandfathered the same scan passes
+    assert analysis_main([FIXTURES, "--baseline", baseline]) == 0
+    # dropping one entry resurfaces exactly that finding
+    with open(baseline) as f:
+        data = json.load(f)
+    data["entries"] = data["entries"][1:]
+    with open(baseline, "w") as f:
+        json.dump(data, f)
+    assert analysis_main([FIXTURES, "--baseline", baseline]) == 1
+
+
+def test_baseline_fingerprint_tracks_line_text():
+    f = Finding(rule="DET001", slug="wallclock", path="a.py", line=3,
+                message="m")
+    fp1 = f.fingerprint("t = time.time()")
+    assert f.fingerprint("  t = time.time()  ") == fp1     # indent-stable
+    assert f.fingerprint("u = time.time()") != fp1         # content-sensitive
+    moved = Finding(rule="DET001", slug="wallclock", path="a.py", line=9,
+                    message="m")
+    assert moved.fingerprint("t = time.time()") == fp1     # line-number-stable
+
+
+def test_committed_baseline_is_empty():
+    entries = load_baseline(os.path.join(REPO, "analysis_baseline.json"))
+    assert entries == {}           # the tree is clean; nothing grandfathered
+
+
+# ------------------------------------------------------------------ #
+# JSON artifact + kernel-contract coverage
+# ------------------------------------------------------------------ #
+def test_json_artifact_and_coverage(tmp_path):
+    out = str(tmp_path / "findings.json")
+    assert analysis_main(SRC_PATHS + ["--json", out]) == 0
+    with open(out) as f:
+        payload = json.load(f)
+    assert payload["findings"] == []
+    cov = payload["contract_coverage"]
+    assert set(cov) >= {"decode", "paged_attn", "qmatmul", "verify"}
+    assert "qdecode_ref" in cov["decode"]["ref_oracles"]
+    assert "paged_qdecode_ref" in cov["paged_attn"]["ref_oracles"]
+    assert cov["qmatmul"]["parity_test"] == "tests/test_kernels.py"
+    assert any(n.startswith("gqa_verify") for n in
+               cov["verify"]["ref_oracles"])
+
+
+def test_contract_coverage_direct():
+    _, ctxs = run_paths([os.path.join(REPO, "src")])
+    cov = contract_coverage(ctxs)
+    for family in ("decode", "paged_attn", "qmatmul"):
+        assert cov[family]["backend_methods"], family
+        assert cov[family]["ref_oracles"], family
+
+
+# ------------------------------------------------------------------ #
+# Parse errors surface as findings, not crashes
+# ------------------------------------------------------------------ #
+def test_syntax_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    findings, _ = run_paths([str(bad)])
+    assert [f.rule for f in findings] == ["ANA000"]
+
+
+def test_import_map_resolves_aliases(tmp_path):
+    ctx = FileContext.from_source("x.py", (
+        "import jax.numpy as jnp\n"
+        "from time import time as t\n"))
+    assert ctx.imports["jnp"] == "jax.numpy"
+    assert ctx.imports["t"] == "time.time"
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -2,7 +2,6 @@
 module exists — compiled.cost_analysis() counts scan bodies once)."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_analysis import HloModule, analyze_hlo
 

@@ -6,9 +6,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro import configs as C
-from repro.api import ModelArtifact, VariantSpec
+from repro.api import ModelArtifact
 from repro.models import init_params
-from repro.serving import InferenceSession
 from repro.serving.scheduler import METRIC_KEYS, ContinuousBatchingEngine
 
 

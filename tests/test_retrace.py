@@ -1,0 +1,64 @@
+"""Runtime recompile audit (opt-in): the PR-4 serving invariant — decode
+compiles once per pow2 cache bucket, never per request — asserted by
+counting actual jit compile-cache entries via repro.analysis.retrace.
+
+Opt-in because it patches jax.jit process-wide for its scope: set
+REPRO_RETRACE_AUDIT=1 (CI's analysis job does)."""
+import os
+
+import pytest
+
+pytestmark = pytest.mark.skipif(
+    os.environ.get("REPRO_RETRACE_AUDIT") != "1",
+    reason="opt-in: set REPRO_RETRACE_AUDIT=1 to run the retrace audit")
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+
+from repro import configs as C                               # noqa: E402
+from repro.analysis.retrace import audit_jit                 # noqa: E402
+from repro.models import init_params                         # noqa: E402
+from repro.serving import InferenceSession                   # noqa: E402
+from repro.serving.kvcache import pow2_bucket                # noqa: E402
+
+
+def _batch(cfg, length, seed=0):
+    key = jax.random.PRNGKey(seed)
+    shape = ((1, length, cfg.n_codebooks) if cfg.n_codebooks > 1
+             else (1, length))
+    batch = {"tokens": jax.random.randint(key, shape, 0, cfg.vocab_size)}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (1, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+def test_decode_compiles_once_per_bucket():
+    cfg = C.smoke_config("stablelm-1.6b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_new = 4
+    short_lens, long_len = (4, 6, 8), 20
+    buckets = {pow2_bucket(ln + cfg.n_frontend_tokens + n_new)
+               for ln in short_lens + (long_len,)}
+    assert len(buckets) == 2       # the workload spans exactly two buckets
+
+    with audit_jit() as audit:
+        session = InferenceSession(params, cfg)
+        for length in short_lens:          # all pad into the first bucket
+            session.generate(_batch(cfg, length), n_new)
+        session.generate(_batch(cfg, long_len), n_new)   # second bucket
+
+    table = audit.compiles()
+    # InferenceSession binds three lambdas in order: forward,
+    # prefill_bucketed, decode — so decode is the third tracked entry
+    forward, prefill, decode = (table["<lambda>"], table["<lambda>#2"],
+                                table["<lambda>#3"])
+    assert decode == len(buckets), table
+    # prefill legitimately compiles per distinct prompt length; the audit
+    # proves the decode loop does NOT (4 requests, 2 compiles)
+    assert prefill == len(short_lens) + 1, table
+    assert forward == 0, table                 # logits() never called
+
+    audit.assert_max_compiles(len(short_lens) + 1)
+    with pytest.raises(AssertionError):
+        audit.assert_max_compiles(1)

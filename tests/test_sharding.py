@@ -1,7 +1,5 @@
 """Sharding rule units: divisibility guards, quantized-leaf handling, cache
 heuristics — all on an abstract mesh (no devices needed)."""
-import jax
-import jax.numpy as jnp
 import pytest
 
 try:

@@ -8,7 +8,6 @@ from conftest import make_batch
 from repro import configs as C
 from repro.models import decode_step, forward, init_params, prefill
 from repro.training import OptimizerConfig, adamw_init, train_step
-from repro.training.loss import IGNORE
 
 ARCHS = C.all_arch_ids()
 SEQ = 32
