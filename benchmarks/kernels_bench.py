@@ -1,0 +1,191 @@
+"""Flash-prefill kernel microbenchmarks -> ``BENCH_kernels.json``.
+
+Times the fused online-softmax flash-prefill path against the pre-flash
+naive baseline (materialized [S, S] causal softmax, ``naive_prefill_ref``)
+at a 512-token prompt, for the three kernel families the dispatcher serves:
+
+    gqa_fp32   grouped-query attention, f32 KV
+    gqa_int8   fused-dequant int8 KV (the cache layout decode reads)
+    mla_fp32   MLA head shape: one KV group, v-dim != qk-dim
+
+Both sides run jit-compiled on the ``pallas-interpret`` backend's *timed*
+path (long prompts route to the XLA tiled oracle — interpret-mode Pallas is
+Python-slow and would make any speedup claim meaningless; the kernel grid
+itself is covered by the parity tests at small S). Per case it reports
+
+    prefill_tok_s   flash prefill throughput      (gated, higher is better)
+    flash_speedup   naive_us / flash_us           (gated, higher is better)
+    int8_speedup    fp32 flash_us / int8 flash_us (gated, higher is better)
+
+plus roofline-style flops/bytes estimates, and records the autotuner's
+winning block shapes (``kernels.autotune``) so the report doubles as the
+operational record TinyMLOps asks for. ``--autotune-cache PATH`` preloads /
+persists the winner table (CI caches it between runs).
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench --fast \
+        [--json OUT_DIR] [--autotune-cache PATH]
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+from repro.kernels import ops
+from repro.kernels import ref as _ref
+
+SEQ_LEN = 512
+BATCH = 1
+BACKEND = "pallas-interpret"
+
+#: name -> (n_q_heads, n_kv_heads, head_dim, v_dim, int8_kv)
+CASES = {
+    "gqa_fp32": (8, 2, 64, 64, False),
+    "gqa_int8": (8, 2, 64, 64, True),
+    "mla_fp32": (8, 8, 64, 96, False),
+}
+
+
+def _quantize(t):
+    absmax = jnp.max(jnp.abs(t), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _inputs(hq: int, hkv: int, hd: int, dv: int, seed: int = 0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (BATCH, SEQ_LEN, hq, hd), jnp.float32)
+    k = jax.random.normal(kk, (BATCH, SEQ_LEN, hkv, hd), jnp.float32)
+    v = jax.random.normal(kv, (BATCH, SEQ_LEN, hkv, dv), jnp.float32)
+    return q, k, v
+
+
+def _median_us(fn, args, iters: int) -> float:
+    jax.block_until_ready(fn(*args))                  # compile + warm
+    ts = []
+    for _ in range(iters):
+        # repro: allow-wallclock -- kernel wall time IS the measurement
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        # repro: allow-wallclock -- interval vs t0 above
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _roofline(hq: int, hkv: int, hd: int, dv: int,
+              int8_kv: bool) -> Dict[str, float]:
+    """Analytic flops/bytes for the flash path (causal tile fraction) —
+    deterministic bookkeeping, not a measurement."""
+    s, b = SEQ_LEN, BATCH
+    t = min(_ref.FLASH_TILE, s)
+    n = -(-s // t)
+    pairs = sum(qi + 1 for qi in range(n))            # causal tile pairs
+    frac = pairs * t * t / (s * s)
+    flops = 2.0 * b * s * s * hq * (hd + dv) * frac
+    kv_b = 1 + 4 / hd if int8_kv else 4               # payload + scale row
+    bytes_ = b * s * (hq * hd * 4 + hkv * hd * kv_b
+                      + hkv * dv * kv_b + hq * dv * 4)
+    return {"flops": flops, "bytes": bytes_,
+            "arith_intensity": flops / bytes_}
+
+
+def run(fast: bool = False, autotune_cache: Optional[str] = None,
+        ) -> Tuple[List[str], Dict[str, Any]]:
+    """Returns (CSV lines, payload for ``BENCH_kernels.json``)."""
+    import os
+
+    from repro.api.backends import use_backend
+
+    if autotune_cache and os.path.exists(autotune_cache):
+        autotune.load_table(autotune_cache)
+    iters = 3 if fast else 10
+    lines: List[str] = []
+    variants: Dict[str, Dict[str, float]] = {}
+    tiles: Dict[str, List[int]] = {}
+    flash_fp = jax.jit(lambda q, k, v: ops.flash_prefill(q, k, v))
+    flash_q = jax.jit(
+        lambda q, ki, ks, vi, vs: ops.flash_qprefill(q, ki, ks, vi, vs))
+    naive = jax.jit(_ref.naive_prefill_ref)
+    fp32_flash_us: Dict[str, float] = {}
+    for name, (hq, hkv, hd, dv, int8_kv) in CASES.items():
+        q, k, v = _inputs(hq, hkv, hd, dv)
+        kernel = "flash_qprefill" if int8_kv else "flash_prefill"
+        precision = "int8" if int8_kv else "fp32"
+        tiles[autotune.cache_key(BACKEND, kernel, hd, precision, SEQ_LEN)] = \
+            list(autotune.tile_config(BACKEND, kernel, hd, precision, SEQ_LEN))
+        if int8_kv:
+            ki, ks = _quantize(k)
+            vi, vs = _quantize(v)
+            naive_args = (q, ki.astype(jnp.float32) * ks[..., None],
+                          vi.astype(jnp.float32) * vs[..., None])
+            flash_fn, flash_args = flash_q, (q, ki, ks, vi, vs)
+        else:
+            naive_args = (q, k, v)
+            flash_fn, flash_args = flash_fp, (q, k, v)
+        naive_us = _median_us(naive, naive_args, iters)
+        with use_backend(BACKEND):
+            flash_us = _median_us(flash_fn, flash_args, iters)
+        tok_s = BATCH * SEQ_LEN / (flash_us * 1e-6)
+        m = {"naive_us": naive_us, "flash_us": flash_us,
+             "prefill_tok_s": tok_s, "flash_speedup": naive_us / flash_us}
+        if int8_kv:
+            base = fp32_flash_us.get(name.replace("int8", "fp32"))
+            if base:
+                m["int8_speedup"] = base / flash_us
+        else:
+            fp32_flash_us[name] = flash_us
+        m.update(_roofline(hq, hkv, hd, dv, int8_kv))
+        variants[name] = m
+        lines.append(f"kernels_flash_{name},{flash_us:.1f},"
+                     f"speedup={m['flash_speedup']:.2f}x")
+        lines.append(f"kernels_naive_{name},{naive_us:.1f},"
+                     f"tok_s={tok_s:.0f}")
+    if autotune_cache:
+        autotune.save_table(autotune_cache)
+    payload: Dict[str, Any] = {
+        "variants": variants,
+        "arch": "synthetic-attention",
+        "seq_len": SEQ_LEN,
+        "batch": BATCH,
+        "iters": iters,
+        "backend": BACKEND,
+        "cases": {n: {"n_heads": c[0], "n_kv_heads": c[1], "head_dim": c[2],
+                      "v_dim": c[3], "int8_kv": c[4]}
+                  for n, c in CASES.items()},
+        "autotune_winners": tiles,
+    }
+    return lines, payload
+
+
+def main() -> None:
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", metavar="OUT_DIR", default=None,
+                    help="also write BENCH_kernels.json into OUT_DIR")
+    ap.add_argument("--autotune-cache", metavar="PATH", default=None,
+                    help="preload / persist the autotuner winner table")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    lines, payload = run(fast=args.fast, autotune_cache=args.autotune_cache)
+    for line in lines:
+        print(line)
+    if args.json:
+        from benchmarks.report import write_report
+
+        results = {"variants": payload["variants"]}
+        config = {k: v for k, v in payload.items() if k != "variants"}
+        config["fast"] = args.fast
+        path = write_report(args.json, "kernels", results, config)
+        print(f"# wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,12 @@ def main() -> None:
     for line in fleet_lines:
         print(line)
     sys.stdout.flush()
+    from benchmarks import kernels_bench
+
+    kernel_lines, kernel_payload = kernels_bench.run(fast=args.fast)
+    for line in kernel_lines:
+        print(line)
+    sys.stdout.flush()
     if args.json:
         #: payload sections that carry *metrics* (flattened + gated by
         #: scripts/compare_bench.py); everything else is run config
@@ -62,7 +68,8 @@ def main() -> None:
                        "spec_decode")
         for bench, payload in (("quant", quant_payload),
                                ("serving", serving_payload),
-                               ("fleet", fleet_payload)):
+                               ("fleet", fleet_payload),
+                               ("kernels", kernel_payload)):
             results = {k: payload[k] for k in result_keys if k in payload}
             config = {k: v for k, v in payload.items()
                       if k not in result_keys}

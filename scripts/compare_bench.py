@@ -15,6 +15,9 @@ metric regresses by more than ``--threshold`` (default 20%):
     accepted_tokens_per_step    lower is worse   (serving, spec decode)
     rollout_convergence_s       higher is worse  (fleet)
     fleet_p99_latency_ms        higher is worse  (fleet)
+    prefill_tok_s               lower is worse   (kernels, flash prefill)
+    flash_speedup               lower is worse   (kernels, vs naive)
+    int8_speedup                lower is worse   (kernels, vs fp32 flash)
 
 All other shared metrics are printed as informational deltas. Deliberately
 dependency-free and repo-import-free so CI can run it against a downloaded
@@ -31,7 +34,9 @@ from typing import Dict
 GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower",
          "kv_hbm_bytes_per_req": "lower",
          "acceptance_rate": "higher", "accepted_tokens_per_step": "higher",
-         "rollout_convergence_s": "lower", "fleet_p99_latency_ms": "lower"}
+         "rollout_convergence_s": "lower", "fleet_p99_latency_ms": "lower",
+         "prefill_tok_s": "higher", "flash_speedup": "higher",
+         "int8_speedup": "higher"}
 
 
 def flatten(node, prefix: str = "") -> Dict[str, float]:

@@ -44,6 +44,8 @@ CLAMP_CALLS = {"jax.numpy.maximum", "jax.numpy.clip", "jax.numpy.where"}
 # kernel family -> (parity test relpath, names the test must mention)
 PARITY_TESTS = {
     "decode": ("tests/test_kernels.py", ("qdecode",)),
+    "flash_prefill": ("tests/test_flash_prefill.py",
+                      ("flash_prefill", "flash_qprefill")),
     "paged_attn": ("tests/test_paged_attention.py",
                    ("paged_decode", "paged_qdecode")),
     "qmatmul": ("tests/test_kernels.py",
@@ -54,6 +56,8 @@ PARITY_TESTS = {
 # backend method -> family (anything unmatched lands in "other")
 METHOD_FAMILY = {
     "qdecode": "decode",
+    "flash_prefill": "flash_prefill",
+    "flash_qprefill": "flash_prefill",
     "paged_decode": "paged_attn",
     "paged_qdecode": "paged_attn",
     "qmatmul_static": "qmatmul",

@@ -1,8 +1,9 @@
 """Pluggable kernel-backend registry (control-plane API, DESIGN §API).
 
-A ``Backend`` implements the four quantized compute primitives the model
-layers dispatch to (``qmatmul_static`` / ``qmatmul_dynamic`` /
-``quantize_weights`` / ``qdecode``). Three backends ship built-in:
+A ``Backend`` implements the compute primitives the model layers dispatch
+to (``qmatmul_static`` / ``qmatmul_dynamic`` / ``quantize_weights`` /
+``qdecode``, the paged decode pair, and the fused flash-prefill pair).
+Three backends ship built-in:
 
     ref              pure-jnp oracles (fast under XLA on CPU)
     pallas-interpret Pallas kernels in interpret mode (CPU-debuggable)
@@ -55,6 +56,12 @@ class Backend:
     def paged_qdecode(self, q, k_pool, k_scale, v_pool, v_scale, tables, pos):
         raise NotImplementedError
 
+    def flash_prefill(self, q, k, v):
+        raise NotImplementedError
+
+    def flash_qprefill(self, q, k_i8, k_s, v_i8, v_s):
+        raise NotImplementedError
+
     def __repr__(self) -> str:
         return f"<Backend {self.name}>"
 
@@ -83,6 +90,12 @@ class RefBackend(Backend):
     def paged_qdecode(self, q, k_pool, k_scale, v_pool, v_scale, tables, pos):
         return _ref.paged_qdecode_ref(q, k_pool, k_scale, v_pool, v_scale,
                                       tables, pos)
+
+    def flash_prefill(self, q, k, v):
+        return _ref.flash_prefill_ref(q, k, v)
+
+    def flash_qprefill(self, q, k_i8, k_s, v_i8, v_s):
+        return _ref.flash_qprefill_ref(q, k_i8, k_s, v_i8, v_s)
 
 
 class PallasBackend(Backend):
@@ -127,6 +140,27 @@ class PallasBackend(Backend):
         return _pa.paged_qdecode_attention(q, k_pool, k_scale, v_pool,
                                            v_scale, tables, pos,
                                            interpret=self.interpret)
+
+    def flash_prefill(self, q, k, v):
+        # block shapes come from the deterministic autotuner (winner table
+        # keyed per backend/head-dim/precision/seq bucket; REPRO_TILE_* pins)
+        from repro.kernels import autotune as _at
+        from repro.kernels import flash_prefill as _fp
+
+        bq, bk = _at.tile_config(self.name, "flash_prefill", q.shape[-1],
+                                 "fp32", q.shape[1])
+        return _fp.flash_prefill_attention(q, k, v, block_q=bq, block_k=bk,
+                                           interpret=self.interpret)
+
+    def flash_qprefill(self, q, k_i8, k_s, v_i8, v_s):
+        from repro.kernels import autotune as _at
+        from repro.kernels import flash_prefill as _fp
+
+        bq, bk = _at.tile_config(self.name, "flash_qprefill", q.shape[-1],
+                                 "int8", q.shape[1])
+        return _fp.flash_qprefill_attention(q, k_i8, k_s, v_i8, v_s,
+                                            block_q=bq, block_k=bk,
+                                            interpret=self.interpret)
 
 
 # ------------------------------------------------------------------ #

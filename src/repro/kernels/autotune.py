@@ -1,0 +1,173 @@
+"""Deterministic block-shape autotuner for the fused prefill kernels.
+
+Timing-based tuning is banned in this tree (DET00x: wall-clock in traced
+code, run-to-run jitter in CI). Instead the sweep scores every candidate
+``(block_q, block_k)`` with an *analytic* cost model — causal tile-pair
+count x tile flops, plus launch overhead per grid step, a VMEM-pressure
+penalty, and a lane-alignment bonus — so the same inputs always produce the
+same winner, byte for byte (TinyMLOps: winning configurations are recorded
+operational artifacts, not rediscovered per deploy).
+
+Winners are cached in-process per Backend registry key
+
+    backend|kernel|hd<head_dim>|<precision>|s<pow2 seq bucket>
+
+and can be persisted to / preloaded from a JSON table (``save_table`` /
+``load_table``, or the ``REPRO_AUTOTUNE_CACHE`` env var) — CI caches that
+file between runs so the bench job never re-sweeps. Escape hatches, highest
+precedence first:
+
+    REPRO_TILE_BQ / REPRO_TILE_BK   env pin (both dims, all kernels)
+    pin(...)                        in-code pin for one cache key
+    cached winner                   from the table
+    sweep                           analytic model over CANDIDATES
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+CANDIDATE_BQ = (16, 32, 64, 128, 256)
+CANDIDATE_BK = (16, 32, 64, 128, 256)
+
+# model constants (arbitrary units — only relative cost matters, and the
+# ordering is what must stay deterministic)
+LAUNCH_COST = 4096.0        # per grid step: pipeline setup + DMA issue
+VMEM_BUDGET = 1 << 20       # bytes of f32 tile state before the penalty
+VMEM_PENALTY = 4.0          # multiplier once a candidate spills the budget
+LANE = 128                  # TPU lane width: aligned tiles stream best
+ALIGN_DISCOUNT = 0.9
+
+_WINNERS: Dict[str, Tuple[int, int]] = {}
+_PINS: Dict[str, Tuple[int, int]] = {}
+_LOADED_ENV_CACHE = False
+
+
+def pow2_bucket(n: int, floor: int = 16) -> int:
+    """Next power-of-two >= n (same semantics as serving.kvcache's helper —
+    duplicated locally so the kernel layer stays below serving)."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+def cache_key(backend: str, kernel: str, head_dim: int, precision: str,
+              seq_len: int) -> str:
+    return "|".join((backend, kernel, f"hd{head_dim}", precision,
+                     f"s{pow2_bucket(seq_len)}"))
+
+
+def _causal_pairs(s: int, bq: int, bk: int) -> int:
+    """Tile pairs the kernel actually computes (diagonal included)."""
+    nq, nk = -(-s // bq), -(-s // bk)
+    return sum(min(nk - 1, (qi * bq + bq - 1) // bk) + 1 for qi in range(nq))
+
+
+def _cost(s: int, bq: int, bk: int, head_dim: int, precision: str) -> float:
+    nq, nk = -(-s // bq), -(-s // bk)
+    pairs = _causal_pairs(s, bq, bk)
+    kv_bytes = 1 if precision == "int8" else 4
+    # two dots per tile pair (scores + accumulate) at f32 throughput
+    compute = pairs * (2.0 * bq * bk * head_dim * 2.0)
+    traffic = pairs * (bq * head_dim * 4 + 2 * bk * head_dim * kv_bytes)
+    launch = nq * nk * LAUNCH_COST
+    cost = compute + traffic + launch
+    tile_state = 4 * (bq * head_dim * 3 + 2 * bk * head_dim)
+    if tile_state > VMEM_BUDGET:
+        cost *= VMEM_PENALTY
+    if bq % LANE == 0 and bk % LANE == 0:
+        cost *= ALIGN_DISCOUNT
+    return cost
+
+
+def sweep(backend: str, kernel: str, head_dim: int, precision: str,
+          seq_len: int) -> Tuple[int, int]:
+    """Score every candidate pair; deterministic tie-break on the candidate
+    tuple itself (sorted iteration order, strict improvement required)."""
+    s = pow2_bucket(seq_len)
+    best: Optional[Tuple[int, int]] = None
+    best_cost = float("inf")
+    for bq in CANDIDATE_BQ:
+        for bk in CANDIDATE_BK:
+            if bq > s and bq != CANDIDATE_BQ[0]:
+                continue
+            if bk > s and bk != CANDIDATE_BK[0]:
+                continue
+            c = _cost(s, min(bq, s), min(bk, s), head_dim, precision)
+            if c < best_cost:
+                best, best_cost = (bq, bk), c
+    assert best is not None
+    return best
+
+
+def pin(backend: str, kernel: str, head_dim: int, precision: str,
+        seq_len: int, block_q: int, block_k: int) -> None:
+    """In-code escape hatch: pin one cache key to explicit tile shapes."""
+    _PINS[cache_key(backend, kernel, head_dim, precision, seq_len)] = (
+        int(block_q), int(block_k))
+
+
+def tile_config(backend: str, kernel: str, head_dim: int, precision: str,
+                seq_len: int) -> Tuple[int, int]:
+    """Resolve ``(block_q, block_k)`` for one kernel launch (see module
+    docstring for precedence)."""
+    env_bq = os.environ.get("REPRO_TILE_BQ")
+    env_bk = os.environ.get("REPRO_TILE_BK")
+    if env_bq and env_bk:
+        return int(env_bq), int(env_bk)
+    _maybe_load_env_cache()
+    key = cache_key(backend, kernel, head_dim, precision, seq_len)
+    if key in _PINS:
+        return _PINS[key]
+    if key not in _WINNERS:
+        _WINNERS[key] = sweep(backend, kernel, head_dim, precision, seq_len)
+    return _WINNERS[key]
+
+
+def winner_table() -> Dict[str, Tuple[int, int]]:
+    """Snapshot of every winner resolved so far (sweeps, loads — not pins)."""
+    return dict(_WINNERS)
+
+
+def serialize_table() -> str:
+    """Canonical byte-identical form: sorted keys, fixed separators."""
+    table = {k: list(v) for k, v in sorted(_WINNERS.items())}
+    return json.dumps({"schema_version": 1, "winners": table},
+                      indent=2, sort_keys=True) + "\n"
+
+
+def save_table(path: str) -> None:
+    with open(path, "w") as fh:
+        fh.write(serialize_table())
+
+
+def load_table(path: str) -> int:
+    """Preload winners from a persisted table; returns entries loaded.
+    Loaded entries win over re-sweeping (identical by construction, but a
+    preload also covers keys swept by an older model version)."""
+    with open(path) as fh:
+        data = json.load(fh)
+    winners = data.get("winners", {})
+    for key, pair in winners.items():
+        _WINNERS[key] = (int(pair[0]), int(pair[1]))
+    return len(winners)
+
+
+def reset() -> None:
+    """Test hook: drop winners, pins, and the env-cache latch."""
+    global _LOADED_ENV_CACHE
+    _WINNERS.clear()
+    _PINS.clear()
+    _LOADED_ENV_CACHE = False
+
+
+def _maybe_load_env_cache() -> None:
+    global _LOADED_ENV_CACHE
+    if _LOADED_ENV_CACHE:
+        return
+    _LOADED_ENV_CACHE = True
+    path = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if path and os.path.exists(path):
+        load_table(path)

@@ -1,0 +1,252 @@
+"""Fused flash-prefill Pallas kernels (online-softmax over tile pairs).
+
+Prefill attention computed as query tiles x KV tiles with the classic
+flash-attention recurrence: per query row a running max ``m``, normalizer
+``l`` and weighted accumulator, rescaled by ``exp(m_prev - m_new)`` as KV
+tiles stream through the innermost (sequential) grid dimension. The dense
+``[S, S]`` score matrix never materializes, and causal tile pairs strictly
+above the diagonal are skipped entirely — roughly half the flops of the
+naive path at long prompts.
+
+GQA is handled by flattening query groups into the row dimension on the
+host: ``q [B, S, Hq, hd]`` becomes ``[B, Hkv, S*G, hd]`` with row
+``r = s * G + g`` so each query tile covers ``block_q`` *positions*
+(``block_q * G`` rows) and shares its KV tile stream. MLA lands here with
+``G = 1`` and a value head dim that may differ from ``hd``.
+
+Two variants share the machinery (mirroring ``paged_attn``):
+
+    flash_prefill_attention    fp32/bf16 K/V
+    flash_qprefill_attention   int8 K/V + per-(pos, head) f32 scales,
+                               dequant fused into the dots
+
+Shapes (model layout in, model layout out):
+    q            [B, S, Hq, hd]
+    k            [B, S, Hkv, hd]     (int8 variant: int8 + scale [B, S, Hkv])
+    v            [B, S, Hkv, dv]
+    out          [B, S, Hq, dv]      f32
+
+Interpret-mode note: the Pallas interpreter executes grid steps in Python,
+so long prompts (the serving path this kernel exists for) would be timed at
+interpreter speed. Above ``INTERPRET_MAX_SEQ`` the interpret backend routes
+to the XLA-compiled tiled oracle in ``kernels.ref`` — identical tiling and
+accumulation order, same causal tile skip — keeping the timed path honest
+(same precedent as ``_use_kernels`` in ``kernels.ops``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+RUN_INIT = -1.0e30          # running-max seed (fits f32 after subtraction)
+
+# interpret mode runs grid steps in Python — beyond this length route to
+# the XLA tiled oracle so benches time compiled code, not the interpreter
+INTERPRET_MAX_SEQ = 256
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _positions(qi, ki, g, bq, bk, rows):
+    """Query/key positions for tile pair (qi, ki): rows are group-flattened
+    (``r = pos * g + group``), keys are plain positions."""
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // g
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    return q_pos, k_pos
+
+
+def _accumulate(scores, v, o_ref, acc_ref, m_ref, l_ref, ki, last):
+    """One online-softmax step: scores [rows, bk] (masked), v [bk, dv]."""
+    m_prev = m_ref[...]                                    # [rows, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                        # [rows, 1]
+    p = jnp.exp(scores - m_new)                            # [rows, bk]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == last)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...] / l_ref[...]
+
+
+def _fp_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+               *, g, bq, bk, s, nk):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+    rows = q_ref.shape[2]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, RUN_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_last = qi * bq + bq - 1          # last query position in this tile
+    last = jnp.minimum(nk - 1, q_last // bk)
+
+    @pl.when(ki * bk <= q_last)        # causal: skip tiles above diagonal
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # [rows, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)                # [bk, dv]
+        hd = q.shape[-1]
+        scores = jax.lax.dot_general(                      # [rows, bk]
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+        q_pos, k_pos = _positions(qi, ki, g, bq, bk, rows)
+        scores = jnp.where((k_pos <= q_pos) & (k_pos < s), scores, NEG_INF)
+        _accumulate(scores, v, o_ref, acc_ref, m_ref, l_ref, ki, last)
+
+
+def _q_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+              acc_ref, m_ref, l_ref, *, g, bq, bk, s, nk):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+    rows = q_ref.shape[2]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, RUN_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_last = qi * bq + bq - 1
+    last = jnp.minimum(nk - 1, q_last // bk)
+
+    @pl.when(ki * bk <= q_last)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)                # int8 -> f32
+        ks = ks_ref[0, 0]                                  # [bk]
+        v = v_ref[0, 0].astype(jnp.float32)
+        vs = vs_ref[0, 0]
+        hd = q.shape[-1]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        scores = scores * ks[None, :] / jnp.sqrt(hd).astype(jnp.float32)
+        q_pos, k_pos = _positions(qi, ki, g, bq, bk, rows)
+        scores = jnp.where((k_pos <= q_pos) & (k_pos < s), scores, NEG_INF)
+        # fold v scales into v — same products/order as scaling p, so the
+        # accumulator is shared with fp (paged_attn precedent)
+        _accumulate(scores, v * vs[:, None], o_ref, acc_ref, m_ref, l_ref,
+                    ki, last)
+
+
+def _pad_seq(x, target):
+    s = x.shape[1]
+    if s == target:
+        return x
+    pad = [(0, 0), (0, target - s)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, pad)
+
+
+def _split_heads(q, k_like, hkv):
+    """Model layout -> kernel layout: q rows group-flattened per kv head."""
+    b, sq, hq, hd = q.shape
+    g = hq // hkv
+    qr = q.reshape(b, sq, hkv, g, hd).transpose(0, 2, 1, 3, 4)
+    qr = qr.reshape(b, hkv, sq * g, hd)
+    return qr, [t.transpose(0, 2, 1, 3) if t.ndim == 4
+                else t.transpose(0, 2, 1) for t in k_like]
+
+
+def _merge_heads(out, b, sq, hkv, g, dv, s):
+    out = out.reshape(b, hkv, sq, g, dv).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, sq, hkv * g, dv)[:, :s]
+
+
+def _clip_blocks(s, block_q, block_k):
+    bq = max(1, min(block_q or DEFAULT_BLOCK_Q, s))
+    bk = max(1, min(block_k or DEFAULT_BLOCK_K, s))
+    return bq, bk
+
+
+def _call(kernel, q, kv_and_specs, *, b, hkv, g, bq, bk, nq, nk, dv,
+          interpret):
+    rows = bq * g
+    arrays, in_specs = zip(*kv_and_specs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(b, hkv, nq, nk),
+        in_specs=[pl.BlockSpec((1, 1, rows, q.shape[-1]),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+                  *in_specs],
+        out_specs=pl.BlockSpec((1, 1, rows, dv),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        scratch_shapes=[pltpu.VMEM((rows, dv), jnp.float32),
+                        pltpu.VMEM((rows, 1), jnp.float32),
+                        pltpu.VMEM((rows, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, nq * rows, dv), jnp.float32),
+        interpret=interpret,
+    )(q, *arrays)
+
+
+def _kv_spec(bk, width):
+    return pl.BlockSpec((1, 1, bk, width), lambda b, h, qi, ki: (b, h, ki, 0))
+
+
+def _kscale_spec(bk):
+    return pl.BlockSpec((1, 1, bk), lambda b, h, qi, ki: (b, h, ki))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def flash_prefill_attention(q, k, v, *, block_q=None, block_k=None,
+                            interpret: bool = False):
+    """fp32/bf16 fused flash prefill — see module docstring for shapes."""
+    b, s, hq, hd = q.shape
+    hkv, dv = k.shape[2], v.shape[3]
+    if interpret and s > INTERPRET_MAX_SEQ:
+        from repro.kernels import ref as _ref
+        return _ref.flash_prefill_ref(q, k, v)
+    g = hq // hkv
+    bq, bk = _clip_blocks(s, block_q, block_k)
+    nq, nk = -(-s // bq), -(-s // bk)
+    qr, (kr, vr) = _split_heads(_pad_seq(q, nq * bq),
+                                [_pad_seq(k, nk * bk), _pad_seq(v, nk * bk)],
+                                hkv)
+    kernel = functools.partial(_fp_kernel, g=g, bq=bq, bk=bk, s=s, nk=nk)
+    out = _call(kernel, qr, [(kr, _kv_spec(bk, hd)), (vr, _kv_spec(bk, dv))],
+                b=b, hkv=hkv, g=g, bq=bq, bk=bk, nq=nq, nk=nk, dv=dv,
+                interpret=interpret)
+    return _merge_heads(out, b, nq * bq, hkv, g, dv, s)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def flash_qprefill_attention(q, k_i8, k_scale, v_i8, v_scale, *,
+                             block_q=None, block_k=None,
+                             interpret: bool = False):
+    """int8-KV fused-dequant flash prefill."""
+    b, s, hq, hd = q.shape
+    hkv, dv = k_i8.shape[2], v_i8.shape[3]
+    if interpret and s > INTERPRET_MAX_SEQ:
+        from repro.kernels import ref as _ref
+        return _ref.flash_qprefill_ref(q, k_i8, k_scale, v_i8, v_scale)
+    g = hq // hkv
+    bq, bk = _clip_blocks(s, block_q, block_k)
+    nq, nk = -(-s // bq), -(-s // bk)
+    sk = nk * bk
+    qr, (kr, ksr, vr, vsr) = _split_heads(
+        _pad_seq(q, nq * bq),
+        [_pad_seq(k_i8, sk), _pad_seq(k_scale, sk),
+         _pad_seq(v_i8, sk), _pad_seq(v_scale, sk)], hkv)
+    kernel = functools.partial(_q_kernel, g=g, bq=bq, bk=bk, s=s, nk=nk)
+    out = _call(kernel, qr,
+                [(kr, _kv_spec(bk, hd)), (ksr, _kscale_spec(bk)),
+                 (vr, _kv_spec(bk, dv)), (vsr, _kscale_spec(bk))],
+                b=b, hkv=hkv, g=g, bq=bq, bk=bk, nq=nq, nk=nk, dv=dv,
+                interpret=interpret)
+    return _merge_heads(out, b, nq * bq, hkv, g, dv, s)

@@ -79,3 +79,17 @@ def paged_qdecode(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
     """int8-KV paged decode attention; scale pools [N,bs,Hkv] f32."""
     return _backend().paged_qdecode(q, k_pool, k_scale, v_pool, v_scale,
                                     tables, pos)
+
+
+def flash_prefill(q, k, v):
+    """Fused online-softmax causal prefill attention.
+
+    q [B,S,Hq,hd]; k [B,S,Hkv,hd]; v [B,S,Hkv,dv]. Returns [B,S,Hq,dv]
+    f32. Block shapes come from the deterministic autotuner on Pallas
+    backends (``kernels.autotune``)."""
+    return _backend().flash_prefill(q, k, v)
+
+
+def flash_qprefill(q, k_i8, k_s, v_i8, v_s):
+    """int8-KV fused-dequant flash prefill; scales [B,S,Hkv] f32."""
+    return _backend().flash_qprefill(q, k_i8, k_s, v_i8, v_s)

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -107,6 +108,107 @@ def paged_qdecode_ref(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
     vsg = paged_gather(v_scale, tables)
     bias = _paged_bias(tables, pos, k_pool.shape[1])
     return qdecode_ref(q, kg, ksg, vg, vsg, bias)
+
+
+RUN_INIT = -1.0e30          # running-max seed, shared with the kernels
+FLASH_TILE = 128            # tile edge for the XLA tiled oracle
+
+
+def _flash_tiles(q, k, v):
+    """Tiled online-softmax causal attention — the flash-prefill oracle.
+
+    Same tiling and accumulation order as the Pallas kernel (square
+    ``FLASH_TILE`` tiles, running max/normalizer rescale, causal tile skip
+    via ``lax.cond``), expressed in XLA so it is also the *timed* interpret
+    path for long prompts (see ``flash_prefill.INTERPRET_MAX_SEQ``).
+
+    q [B,S,Hq,hd]; k [B,S,Hkv,hd]; v [B,S,Hkv,dv] -> [B,S,Hq,dv] f32.
+    """
+    b, s, hq, hd = q.shape
+    hkv, dv = k.shape[2], v.shape[3]
+    g = hq // hkv
+    t = min(FLASH_TILE, s)
+    n = -(-s // t)
+    pad = n * t - s
+
+    def padseq(x):
+        if not pad:
+            return x
+        return jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+
+    qf = padseq(q.astype(jnp.float32)).reshape(b, n, t, hkv, g, hd)
+    kt = padseq(k.astype(jnp.float32)).reshape(b, n, t, hkv, hd)
+    vt = padseq(v.astype(jnp.float32)).reshape(b, n, t, hkv, dv)
+    scale = jnp.sqrt(jnp.float32(hd))
+    k_stream = (jnp.arange(n), kt.transpose(1, 0, 2, 3, 4),
+                vt.transpose(1, 0, 2, 3, 4))
+
+    def q_tile(_, args):
+        qi, qt = args                      # qt [b, t, hkv, g, hd]
+
+        def k_tile(carry, args2):
+            ki, kk, vv = args2             # kk [b, t, hkv, hd]
+
+            def compute(c):
+                m0, l0, a0 = c
+                sc = jnp.einsum("bckgh,btkh->bkgct", qt, kk) / scale
+                q_pos = qi * t + jnp.arange(t)
+                k_pos = ki * t + jnp.arange(t)
+                mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < s)
+                sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+                m1 = jnp.maximum(m0, sc.max(-1, keepdims=True))
+                alpha = jnp.exp(m0 - m1)
+                p = jnp.exp(sc - m1)
+                l1 = l0 * alpha + p.sum(-1, keepdims=True)
+                a1 = a0 * alpha + jnp.einsum("bkgct,btkh->bkgch", p, vv)
+                return m1, l1, a1
+
+            new = jax.lax.cond(ki * t <= qi * t + t - 1,
+                               compute, lambda c: c, carry)
+            return new, None
+
+        init = (jnp.full((b, hkv, g, t, 1), RUN_INIT, jnp.float32),
+                jnp.zeros((b, hkv, g, t, 1), jnp.float32),
+                jnp.zeros((b, hkv, g, t, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(k_tile, init, k_stream)
+        return None, (acc / l).transpose(0, 3, 1, 2, 4)   # [b, t, hkv, g, dv]
+
+    _, outs = jax.lax.scan(q_tile, None,
+                           (jnp.arange(n), qf.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, n * t, hq, dv)
+    return out[:, :s]
+
+
+def flash_prefill_ref(q, k, v):
+    """fp flash-prefill oracle — tiled online softmax, causal tile skip."""
+    return _flash_tiles(q, k, v)
+
+
+def flash_qprefill_ref(q, k_i8, k_s, v_i8, v_s):
+    """int8-KV flash-prefill oracle: dequantize per position (exactly the
+    ``payload * scale`` semantics the fused kernel folds into its dots),
+    then the shared tiled core."""
+    kf = k_i8.astype(jnp.float32) * k_s[..., None]
+    vf = v_i8.astype(jnp.float32) * v_s[..., None]
+    return _flash_tiles(q, kf, vf)
+
+
+def naive_prefill_ref(q, k, v):
+    """Pre-flash baseline: materialized [S, S] causal softmax attention.
+    Kept as the denominator for the BENCH_kernels speedup gate and the
+    semantic target for flash-vs-naive parity tests."""
+    b, s, hq, hd = q.shape
+    hkv, dv = k.shape[2], v.shape[3]
+    g = hq // hkv
+    qg = q.astype(jnp.float32).reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg,
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    scores = jnp.where(causal[None, None, None], scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, dv)
 
 
 def qmatmul_dynamic_ref(x, w_int8, w_scale):

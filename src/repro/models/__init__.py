@@ -6,6 +6,7 @@ from repro.models.transformer import (
     init_cache,
     init_params,
     prefill,
+    prefill_paged,
     verify_step,
     verify_step_paged,
 )
@@ -14,6 +15,7 @@ __all__ = [
     "ModelConfig",
     "forward",
     "prefill",
+    "prefill_paged",
     "decode_step",
     "decode_step_paged",
     "init_cache",

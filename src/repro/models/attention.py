@@ -1,8 +1,14 @@
 """Attention mixers: GQA (full / sliding-window) and MLA (deepseek-v2).
 
-Prefill uses a chunked-query attention (scores materialized per q-chunk, never
-[S, S]) so 32k prefill fits; sliding-window prefill slices only the needed KV
-band per q-chunk, making compute O(S * window).
+Full-attention prefill dispatches to the backend's fused flash-prefill
+kernel (``ops.flash_prefill`` / ``ops.flash_qprefill`` — online softmax
+over query x KV tiles, ``kernels/flash_prefill.py``); sliding-window
+prefill keeps the chunked-query core, slicing only the needed KV band per
+q-chunk so compute stays O(S * window). ``cfg.opt_flash_prefill=False``
+restores the chunked path everywhere. The paged cold-prefill twins
+(``gqa_prefill_paged`` / ``mla_prefill_paged``) additionally scatter the
+produced K/V straight into the block pools, so chunked admission never
+materializes a dense cache.
 
 Decode consumes a KV cache: full-attention caches hold seq_len entries,
 sliding-window caches are ring buffers of ``window`` entries (this is what
@@ -176,6 +182,13 @@ def _quantize_kv(t):
     return q, scale
 
 
+def _flash_ok(cfg: ModelConfig, window: int) -> bool:
+    """Prefill dispatch gate: the fused flash-prefill path covers full
+    (non-windowed) causal attention; sliding windows keep the banded
+    chunked path (O(S*window) there beats flash's causal-tile skip)."""
+    return cfg.opt_flash_prefill and not window
+
+
 def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
                 pad_to: int = 0):
     """Returns (out [B,S,d], kv cache).
@@ -183,7 +196,12 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
     Cache is (k, v) [B,S_cache,Hkv,hd], or with cfg.kv_cache_int8 the 4-tuple
     (k_i8, k_scale, v_i8, v_scale). With a window the cache is a ring buffer
     of exactly ``window`` slots (entry for position t at slot t % window);
-    otherwise it is padded to ``pad_to`` so decode_step can append."""
+    otherwise it is padded to ``pad_to`` so decode_step can append.
+
+    Full-attention prefill dispatches to the backend's fused flash kernel
+    (``ops.flash_prefill``; with int8 KV the fused-dequant variant attends
+    over the *quantized* stream — the same values decode later reads, so
+    prefill and decode see one consistent cache)."""
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
     q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
@@ -191,8 +209,25 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
     v = linear(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    out = chunked_attention(q, k, v, positions, window=window,
-                            native_accum=cfg.opt_attn_accum)
+    flash = _flash_ok(cfg, window)
+    if cfg.kv_cache_int8 and flash:
+        from repro.kernels import ops  # backend-dispatched flash prefill
+
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        out = ops.flash_qprefill(q, kq, ks, vq, vs).astype(x.dtype)
+        out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+        return out, (_ring_or_pad(kq, s, window, pad_to),
+                     _ring_or_pad(ks, s, window, pad_to),
+                     _ring_or_pad(vq, s, window, pad_to),
+                     _ring_or_pad(vs, s, window, pad_to))
+    if flash:
+        from repro.kernels import ops
+
+        out = ops.flash_prefill(q, k, v).astype(x.dtype)
+    else:
+        out = chunked_attention(q, k, v, positions, window=window,
+                                native_accum=cfg.opt_attn_accum)
     out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
     kc = _ring_or_pad(k, s, window, pad_to)
     vc = _ring_or_pad(v, s, window, pad_to)
@@ -201,6 +236,70 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
         vq, vs = _quantize_kv(vc)
         return out, (kq, ks, vq, vs)
     return out, (kc, vc)
+
+
+def _paged_prefill_slots(tables, n_valid, s: int, block_size: int):
+    """(block ids [B,S], offsets [B,S]) for scattering S prefill positions
+    per sequence through the block table. Positions >= n_valid (bucket
+    padding) and unallocated table entries route to the reserved trash
+    block 0, so the traced scatter is shape-stable per bucket."""
+    b = tables.shape[0]
+    pos_ids = jnp.arange(s, dtype=jnp.int32)
+    idx = jnp.minimum(pos_ids // block_size, tables.shape[1] - 1)
+    blk = jnp.take_along_axis(tables, jnp.broadcast_to(idx[None], (b, s)),
+                              axis=1)
+    blk = jnp.where(pos_ids[None] < n_valid[:, None], jnp.maximum(blk, 0), 0)
+    off = jnp.broadcast_to((pos_ids % block_size)[None], (b, s))
+    return blk, off
+
+
+def gqa_prefill_paged(p, x, positions, cache, pos, tables, cfg: ModelConfig):
+    """Cold-path paged prefill: compute the prompt's K/V, attend with the
+    fused flash kernel, and scatter the produced K/V *directly* into the
+    block pools through the slot's table — the dense ``[B, S_cache]`` cache
+    never materializes. ``pos`` is the traced valid-token count; padded
+    positions land in the trash block. Full attention only (paged configs
+    exclude sliding windows — see ``serving.kvcache.paged_supported``)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    int8_kv = cfg.kv_cache_int8
+    if int8_kv:
+        k_pool, k_scale, v_pool, v_scale = cache
+    else:
+        k_pool, v_pool = cache
+    n_valid = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    blk, off = _paged_prefill_slots(tables, n_valid, s, k_pool.shape[1])
+    from repro.kernels import ops  # backend-dispatched flash prefill
+
+    if int8_kv:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        if cfg.opt_flash_prefill:
+            out = ops.flash_qprefill(q, kq, ks, vq, vs).astype(x.dtype)
+        else:
+            out = chunked_attention(q, k, v, positions,
+                                    native_accum=cfg.opt_attn_accum)
+        k_pool = k_pool.at[blk, off].set(kq)
+        v_pool = v_pool.at[blk, off].set(vq)
+        k_scale = k_scale.at[blk, off].set(ks)
+        v_scale = v_scale.at[blk, off].set(vs)
+        new_cache = (k_pool, k_scale, v_pool, v_scale)
+    else:
+        if cfg.opt_flash_prefill:
+            out = ops.flash_prefill(q, k, v).astype(x.dtype)
+        else:
+            out = chunked_attention(q, k, v, positions,
+                                    native_accum=cfg.opt_attn_accum)
+        k_pool = k_pool.at[blk, off].set(k.astype(k_pool.dtype))
+        v_pool = v_pool.at[blk, off].set(v.astype(v_pool.dtype))
+        new_cache = (k_pool, v_pool)
+    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+    return out, new_cache
 
 
 def _batched_update(cache, update, slots):
@@ -541,11 +640,39 @@ def mla_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
     c_kv = linear(p["w_dkv"], x)           # [B, S, kv_lora]
     k_rope = linear(p["w_kr"], x)          # [B, S, qk_rope]
     q, k, v = _mla_qkv(p, x, c_kv, k_rope, positions, positions, cfg)
-    out = chunked_attention(q, k, v, positions, window=window,
-                            native_accum=cfg.opt_attn_accum)
+    if _flash_ok(cfg, window):
+        from repro.kernels import ops  # flash with G=1, dv != hd
+
+        out = ops.flash_prefill(q, k, v).astype(x.dtype)
+    else:
+        out = chunked_attention(q, k, v, positions, window=window,
+                                native_accum=cfg.opt_attn_accum)
     out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.v_head_dim))
     return out, (_ring_or_pad(c_kv, s, window, pad_to),
                  _ring_or_pad(k_rope, s, window, pad_to))
+
+
+def mla_prefill_paged(p, x, positions, cache, pos, tables, cfg: ModelConfig):
+    """Paged MLA cold prefill: scatter the compressed ``c_kv``/``k_rope``
+    streams straight into the block pools (see ``gqa_prefill_paged``)."""
+    b, s, _ = x.shape
+    c_pool, r_pool = cache
+    n_valid = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    c_kv = linear(p["w_dkv"], x)
+    k_rope = linear(p["w_kr"], x)
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope, positions, positions, cfg)
+    if cfg.opt_flash_prefill:
+        from repro.kernels import ops
+
+        out = ops.flash_prefill(q, k, v).astype(x.dtype)
+    else:
+        out = chunked_attention(q, k, v, positions,
+                                native_accum=cfg.opt_attn_accum)
+    blk, off = _paged_prefill_slots(tables, n_valid, s, c_pool.shape[1])
+    c_pool = c_pool.at[blk, off].set(c_kv.astype(c_pool.dtype))
+    r_pool = r_pool.at[blk, off].set(k_rope.astype(r_pool.dtype))
+    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.v_head_dim))
+    return out, (c_pool, r_pool)
 
 
 def _mla_attend_absorbed(p, x, c_kv, k_rope, pos_b, k_pos, valid,

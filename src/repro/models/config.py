@@ -83,6 +83,11 @@ class ModelConfig:
     opt_moe_shardmap: bool = False # shard_map MoE dispatch: local sort-based
                                    # dispatch per data shard + explicit
                                    # all_to_all over the expert (model) axis
+    opt_flash_prefill: bool = True # fused online-softmax flash prefill via
+                                   # the Backend registry (kernels/
+                                   # flash_prefill.py); False restores the
+                                   # chunked-query path. Full attention only
+                                   # (sliding windows keep the banded chunks)
     # ---- provenance ----
     source: str = ""
 

@@ -169,7 +169,14 @@ def _apply_attn_block(lp, x, cfg: ModelConfig, *, moe: bool, mode: str,
             a_out, new_cache = attn.gqa_decode(lp["attn"], h, cache, pos, cfg,
                                                window=window)
     else:
-        if cfg.attention == "mla":
+        if tables is not None:
+            # paged cold prefill: K/V scatter straight into the block pools
+            # through the slot's table (pos = traced valid-token count)
+            pre = (attn.mla_prefill_paged if cfg.attention == "mla"
+                   else attn.gqa_prefill_paged)
+            a_out, new_cache = pre(lp["attn"], h, positions, cache, pos,
+                                   tables, cfg)
+        elif cfg.attention == "mla":
             a_out, new_cache = attn.mla_prefill(lp["attn"], h, positions, cfg,
                                                 window=window, pad_to=pad_to)
         else:
@@ -368,14 +375,44 @@ def forward(params, batch, cfg: ModelConfig):
     return lm_head(params, x, cfg), aux
 
 
-def prefill(params, batch, cfg: ModelConfig, pad_to: int = 0):
+def prefill(params, batch, cfg: ModelConfig, pad_to: int = 0, n_valid=None):
     """(last-position logits, cache). ``pad_to`` reserves cache slots for
-    subsequent decode_step calls (default: seq + 64)."""
+    subsequent decode_step calls (default: seq + 64).
+
+    ``n_valid`` (traced int32, optional) marks the real token count when the
+    *token* axis itself is bucket-padded (serving: distinct prompt lengths
+    share one compiled shape): logits come from position ``n_valid - 1``
+    instead of the last row. Pad tokens sit after the real ones, so causal
+    attention keeps them out of every valid position's context."""
     x = embed_inputs(params, batch, cfg)
     if not pad_to:
         pad_to = x.shape[1] + 64
     x, caches, _ = _backbone(params, x, cfg, mode="prefill", pad_to=pad_to)
-    return lm_head(params, x[:, -1:], cfg), caches
+    if n_valid is None:
+        last = x[:, -1:]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(n_valid, jnp.int32) - 1, 1, axis=1)
+    return lm_head(params, last, cfg), caches
+
+
+def prefill_paged(params, caches, batch, pos, tables, cfg: ModelConfig):
+    """Paged cold prefill (KV-cache v2): run the prompt once and scatter
+    every layer's K/V straight into the pooled block leaves through the
+    per-sequence block table — the dense single-request cache of
+    ``prefill`` + ``PagedKVCache.scatter_prefill`` never materializes.
+
+    ``caches`` are the pooled leaves, ``tables`` [B, max_blocks] int32 (the
+    scheduler allocates the prompt's blocks *before* this traced call), and
+    ``pos`` the traced valid-token count — token axes may be bucket-padded,
+    pad positions write to the reserved trash block. Returns (logits at
+    ``pos - 1``, updated pools)."""
+    x = embed_inputs(params, batch, cfg)
+    x, caches, _ = _backbone(params, x, cfg, mode="prefill", caches=caches,
+                             pos=pos, tables=tables)
+    last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(pos, jnp.int32) - 1, 1, axis=1)
+    return lm_head(params, last, cfg), caches
 
 
 def decode_step(params, caches, tokens, pos, cfg: ModelConfig):

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.models import decode_step, forward, prefill
 from repro.models.config import ModelConfig
-from repro.serving.kvcache import pow2_bucket
+from repro.serving.kvcache import bucketed_prefill_ok, pow2_bucket
 
 
 def interpolated_percentile(xs: Sequence[float], p: float) -> float:
@@ -86,10 +86,13 @@ class InferenceSession:
         self._forward = self._bind(lambda p, b: forward(p, b, cfg)[0])
         # power-of-two padded prefill: generate() pads the cache to the next
         # bucket >= prompt + budget, so distinct prompt lengths share a
-        # handful of compiled shapes instead of recompiling per length
+        # handful of compiled shapes instead of recompiling per length.
+        # ``n_valid`` (traced int32) marks the true prompt end so *tokens*
+        # can be bucket-padded too (where bucketed_prefill_ok allows) — one
+        # compile per bucket instead of one per distinct prompt length.
         self._prefill_bucketed = self._bind(
-            lambda p, b, pad: prefill(p, b, cfg, pad_to=pad),
-            static_argnums=2)
+            lambda p, b, nv, pad: prefill(p, b, cfg, pad_to=pad, n_valid=nv),
+            static_argnums=3)
         self._decode = self._bind(
             lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
 
@@ -125,8 +128,18 @@ class InferenceSession:
         bounding recompiles to O(log max_len) shapes."""
         cfg = self.cfg
         tok_len = batch["tokens"].shape[1] + cfg.n_frontend_tokens
+        pad = pow2_bucket(tok_len + n_new)
+        if bucketed_prefill_ok(cfg):
+            # pad tokens to the bucket (the attention mask + n_valid slice
+            # make pads inert): one traced token shape per bucket, so a
+            # retrace audit over mixed prompt lengths stays flat
+            tb = min(pow2_bucket(tok_len), pad) - cfg.n_frontend_tokens
+            t = batch["tokens"]
+            if t.shape[1] < tb:
+                batch = dict(batch)
+                batch["tokens"] = jnp.pad(t, ((0, 0), (0, tb - t.shape[1])))
         last, cache = self._prefill_bucketed(self.params, batch,
-                                             pow2_bucket(tok_len + n_new))
+                                             jnp.int32(tok_len), pad)
         outs = []
         nxt = jnp.argmax(last[..., -1, :], axis=-1).astype(jnp.int32)
         if cfg.n_codebooks > 1:

@@ -58,6 +58,20 @@ def paged_supported(cfg: ModelConfig) -> Optional[str]:
     return None
 
 
+def bucketed_prefill_ok(cfg: ModelConfig) -> bool:
+    """Whether prefill may pad *tokens* (not just the cache) to a bucket.
+
+    Token-bucketed prefill feeds pad tokens through the backbone and slices
+    logits at the true last position (``n_valid``), so every prompt length
+    in a bucket shares ONE compiled prefill. Pad tokens are attention-masked
+    but still occupy rows, which would pollute MoE expert-capacity routing
+    and SSM recurrent state — those archs keep exact-length prefill.
+    Sliding windows and multi-codebook models keep their bespoke paths too.
+    """
+    return (cfg.arch_type == "dense" and not cfg.window
+            and cfg.n_codebooks <= 1)
+
+
 def pow2_bucket(n: int, floor: int = 16) -> int:
     """Next power-of-two >= n (min ``floor``) — the shared padding bucket
     used by prefill so distinct prompt lengths reuse compiled shapes."""

@@ -79,11 +79,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import (decode_step, decode_step_paged, init_cache, prefill,
-                          verify_step, verify_step_paged)
+                          prefill_paged, verify_step, verify_step_paged)
 from repro.models.config import ModelConfig
 from repro.serving.engine import interpolated_percentile
-from repro.serving.kvcache import (PagedKVCache, hash_prompt_blocks,
-                                   paged_supported, pow2_bucket)
+from repro.serving.kvcache import (PagedKVCache, bucketed_prefill_ok,
+                                   hash_prompt_blocks, paged_supported,
+                                   pow2_bucket)
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.spec_decode import (SpecConfig, draft_propose,
                                        greedy_accept, rejection_sample,
@@ -297,8 +298,12 @@ class ContinuousBatchingEngine:
             return call
 
         self._decode = bind(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+        # ``nv`` (traced int32) marks the true token count: _admit_dense
+        # bucket-pads the token axis (where bucketed_prefill_ok allows) so
+        # distinct prompt lengths share one compiled prefill per bucket
         self._prefill = bind(
-            lambda p, b: prefill(p, b, cfg, pad_to=self._pad_len))
+            lambda p, b, nv: prefill(p, b, cfg, pad_to=self._pad_len,
+                                     n_valid=nv))
         if spec is not None:
             dcfg = self.draft_cfg
             # the draft keeps a dense per-slot cache even under a paged
@@ -312,7 +317,8 @@ class ContinuousBatchingEngine:
                 lambda p, c, t, pos: decode_step(p, c, t, pos, dcfg),
                 draft=True)
             self._draft_prefill = bind(
-                lambda p, b: prefill(p, b, dcfg, pad_to=self._pad_len),
+                lambda p, b, nv: prefill(p, b, dcfg, pad_to=self._pad_len,
+                                         n_valid=nv),
                 draft=True)
             self._verify = bind(
                 lambda p, c, t, pos: verify_step(p, c, t, pos, cfg))
@@ -328,11 +334,13 @@ class ContinuousBatchingEngine:
             self._decode_paged = bind(
                 lambda p, c, t, pos, tabs: decode_step_paged(p, c, t, pos,
                                                              tabs, cfg))
-            # prefill padded to a power-of-two bucket: one compile per
-            # bucket instead of one per distinct prompt length
-            self._prefill_bucketed = bind(
-                lambda p, b, pad: prefill(p, b, cfg, pad_to=pad),
-                static_argnums=2)
+            # cold prefill scatters K/V straight into the block pools
+            # through the slot's table (no dense single-request cache);
+            # tokens are bucket-padded where the arch allows, so one
+            # compile per bucket instead of one per distinct prompt length
+            self._prefill_paged = bind(
+                lambda p, c, b, nv, tabs: prefill_paged(p, c, b, nv, tabs,
+                                                        cfg))
 
     # ---------------------------------------------------------------- #
     @classmethod
@@ -427,6 +435,21 @@ class ContinuousBatchingEngine:
                 _, _, req = heapq.heappop(self._pending)
                 self._admit_dense(slot, req)
 
+    def _pad_tokens(self, batch: dict, cfg: ModelConfig, total: int) -> dict:
+        """Bucket-pad the token axis so every prompt length in a power-of-
+        two bucket reuses ONE compiled prefill. ``total`` counts frontend
+        tokens; the result plus frontends never exceeds the cache
+        (``_pad_len``). No-op for archs where pad tokens are not inert
+        (MoE capacity, SSM state — see ``bucketed_prefill_ok``)."""
+        if not bucketed_prefill_ok(cfg):
+            return batch
+        tb = min(pow2_bucket(total), self._pad_len) - cfg.n_frontend_tokens
+        t = batch["tokens"]
+        if t.shape[1] < tb:
+            batch = dict(batch)
+            batch["tokens"] = jnp.pad(t, ((0, 0), (0, tb - t.shape[1])))
+        return batch
+
     def _admit_dense(self, slot: int, req: GenRequest) -> None:
         s = req.prompt_len
         chunk = min(self.prefill_chunk, s) if self.prefill_chunk else s
@@ -434,7 +457,10 @@ class ContinuousBatchingEngine:
         if req.frontend_embeds is not None:
             # frontend embeds are prepended, so they ride the first chunk
             batch["frontend_embeds"] = req.frontend_embeds
-        last, single_cache = self._prefill(self.params, batch)
+        n_valid = chunk + self.cfg.n_frontend_tokens
+        batch = self._pad_tokens(batch, self.cfg, n_valid)
+        last, single_cache = self._prefill(self.params, batch,
+                                           jnp.int32(n_valid))
         self.cache = _tree_insert(self.cache, single_cache, slot)
         self.positions = self.positions.at[slot].set(
             chunk + self.cfg.n_frontend_tokens)
@@ -524,9 +550,18 @@ class ContinuousBatchingEngine:
             batch = {"tokens": tokens[:, :chunk]}
             if req.frontend_embeds is not None:
                 batch["frontend_embeds"] = req.frontend_embeds
-            last, single_cache = self._prefill_bucketed(
-                self.params, batch, pow2_bucket(cache_tokens))
-            kv.scatter_prefill(slot, single_cache, cache_tokens)
+            # allocate the prompt's blocks up front (the admission check
+            # above guarantees availability), then scatter K/V straight
+            # into the pools inside the traced prefill — the dense
+            # single-request cache never materializes
+            while (len(kv.slot_blocks[slot])
+                   < kv.blocks_for_tokens(cache_tokens)):
+                kv.grow(slot)
+            batch = self._pad_tokens(batch, self.cfg, cache_tokens)
+            last, kv.pools = self._prefill_paged(
+                self.params, kv.pools, batch, jnp.int32(cache_tokens),
+                kv.tables[slot:slot + 1])
+            self.cache = kv.pools
             if hashing:
                 for i in range(chunk // bs):
                     kv.alloc.register(kv.slot_blocks[slot][i], hashes[i])
@@ -576,8 +611,12 @@ class ContinuousBatchingEngine:
         tokens on a preemption resume) even when the target got a
         prefix hit — draft KV sharing is a ROADMAP follow-up."""
         req._spec_pending = None
-        _, single = self._draft_prefill(self.draft_params,
-                                        {"tokens": req.feed_tokens})
+        dcfg = self.draft_cfg
+        n_valid = req.feed_len + dcfg.n_frontend_tokens
+        _, single = self._draft_prefill(
+            self.draft_params,
+            self._pad_tokens({"tokens": req.feed_tokens}, dcfg, n_valid),
+            jnp.int32(n_valid))
         self.draft_cache = _tree_insert(self.draft_cache, single, slot)
         self.draft_positions = self.draft_positions.at[slot].set(req.feed_len)
 

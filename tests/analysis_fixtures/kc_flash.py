@@ -1,0 +1,28 @@
+"""KC1xx fixture, flash-prefill flavored: a 4-d (batch, q-head, q-tile,
+k-tile) grid whose BlockSpecs disagree with their block shapes or with the
+grid arity — the mis-wirings the online-softmax kernel invites."""
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, o_ref):
+    o_ref[...] = q_ref[...]
+
+
+def flash_bad_rank(q):
+    # KC101: 4-d block shape but the index map returns 3 indices — the
+    # pipeline would mis-slice the query tile
+    spec = pl.BlockSpec((1, 128, 1, 64), lambda b, h, qi, ki: (b, qi, h))
+    out = pl.BlockSpec((1, 128, 1, 64), lambda b, h, qi, ki: (b, qi, h, 0))
+    return pl.pallas_call(_kernel, grid=(2, 4, 4, 4),
+                          in_specs=[spec], out_specs=out,
+                          out_shape=q)(q)
+
+
+def flash_bad_arity(q):
+    # KC102: this module's grids are rank 4 (batch, head, q-tile, k-tile)
+    # but the index map only takes the two tile indices
+    spec = pl.BlockSpec((1, 128, 1, 64), lambda qi, ki: (0, qi, 0, 0))
+    out = pl.BlockSpec((1, 128, 1, 64), lambda b, h, qi, ki: (b, qi, h, 0))
+    return pl.pallas_call(_kernel, grid=(2, 4, 4, 4),
+                          in_specs=[spec], out_specs=out,
+                          out_shape=q)(q)

@@ -25,6 +25,7 @@ EXPECTED = {
     "det_hostsync.py": {"DET004": 3},
     "rec_branch.py": {"REC001": 1, "REC002": 2},
     "kc_blockspec.py": {"KC101": 1, "KC102": 1, "KC103": 1},
+    "kc_flash.py": {"KC101": 1, "KC102": 1},
     "kc_int8.py": {"KC201": 2},
     "kernel_contract/api/backends.py": {
         "KC001": 1, "KC002": 1, "KC003": 1, "KC004": 1, "KC005": 1},
@@ -112,7 +113,7 @@ def test_baseline_roundtrip_and_gating(tmp_path):
     assert analysis_main([FIXTURES, "--baseline", baseline,
                           "--update-baseline"]) == 0
     entries = load_baseline(baseline)
-    assert len(entries) == 23
+    assert len(entries) == 25
     # with everything grandfathered the same scan passes
     assert analysis_main([FIXTURES, "--baseline", baseline]) == 0
     # dropping one entry resurfaces exactly that finding
@@ -150,8 +151,11 @@ def test_json_artifact_and_coverage(tmp_path):
         payload = json.load(f)
     assert payload["findings"] == []
     cov = payload["contract_coverage"]
-    assert set(cov) >= {"decode", "paged_attn", "qmatmul", "verify"}
+    assert set(cov) >= {"decode", "flash_prefill", "paged_attn", "qmatmul",
+                        "verify"}
     assert "qdecode_ref" in cov["decode"]["ref_oracles"]
+    assert "flash_prefill_ref" in cov["flash_prefill"]["ref_oracles"]
+    assert cov["flash_prefill"]["parity_test"] == "tests/test_flash_prefill.py"
     assert "paged_qdecode_ref" in cov["paged_attn"]["ref_oracles"]
     assert cov["qmatmul"]["parity_test"] == "tests/test_kernels.py"
     assert any(n.startswith("gqa_verify") for n in

@@ -1,0 +1,206 @@
+"""Flash-prefill kernel family: interpret-mode kernel vs ref oracles
+(flash_prefill / flash_qprefill parity), flash vs naive model-level logits
+(GQA + MLA, fp32 + int8-KV), paged direct-scatter prefill vs dense
+prefill + scatter, and block-shape autotuner determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro import configs as C
+from repro.kernels import autotune
+from repro.kernels import ref as _ref
+from repro.kernels.flash_prefill import (INTERPRET_MAX_SEQ,
+                                         flash_prefill_attention,
+                                         flash_qprefill_attention)
+from repro.models import init_params, prefill, prefill_paged
+from repro.serving.kvcache import PagedKVCache
+
+
+def _rand_qkv(hq, hkv, hd, dv, b=2, s=48, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, s, hq, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, s, hkv, dv), jnp.float32)
+    return q, k, v
+
+
+# ------------------------------------------------------------------ #
+# Kernel-level parity: interpret-mode Pallas grid vs the oracles
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("hq,hkv,hd,dv", [(4, 2, 16, 16),    # GQA, G=2
+                                          (4, 4, 16, 24)])   # MLA: dv != hd
+def test_flash_prefill_kernel_matches_oracles(hq, hkv, hd, dv):
+    q, k, v = _rand_qkv(hq, hkv, hd, dv)
+    got = flash_prefill_attention(q, k, v, block_q=16, block_k=32,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_ref.flash_prefill_ref(q, k, v)),
+                               rtol=1e-5, atol=2e-5)
+    # and against the pre-flash semantic target (materialized [S, S])
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_ref.naive_prefill_ref(q, k, v)),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_flash_qprefill_kernel_matches_oracle():
+    q, k, v = _rand_qkv(4, 2, 16, 16, seed=1)
+    k_i8, k_s = _ref.quantize_kv_ref(k)
+    v_i8, v_s = _ref.quantize_kv_ref(v)
+    got = flash_qprefill_attention(q, k_i8, k_s, v_i8, v_s,
+                                   block_q=16, block_k=32, interpret=True)
+    want = _ref.flash_qprefill_ref(q, k_i8, k_s, v_i8, v_s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=2e-5)
+    # fused dequant == dequantize-then-attend, so naive-on-dequant agrees too
+    kf = k_i8.astype(jnp.float32) * k_s[..., None]
+    vf = v_i8.astype(jnp.float32) * v_s[..., None]
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_ref.naive_prefill_ref(q, kf, vf)),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_flash_prefill_ragged_tail_tiles_masked():
+    """S not a multiple of either block: the pad keys past S must be masked
+    out (k_pos < s), not softmaxed in as zeros."""
+    q, k, v = _rand_qkv(2, 1, 8, 8, b=1, s=40, seed=3)
+    got = flash_prefill_attention(q, k, v, block_q=16, block_k=32,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_ref.naive_prefill_ref(q, k, v)),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_interpret_long_seq_routes_to_tiled_oracle():
+    """Above INTERPRET_MAX_SEQ interpret mode must return the XLA tiled
+    oracle's output (the benchmark's timed path), not interpreter-speed
+    grid steps."""
+    s = INTERPRET_MAX_SEQ + 16
+    q, k, v = _rand_qkv(2, 1, 8, 8, b=1, s=s, seed=4)
+    got = flash_prefill_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(_ref.flash_prefill_ref(q, k, v)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# Model-level: flash dispatch vs the naive prefill path
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name", ["mistral-nemo-12b",      # GQA
+                                  "deepseek-v2-236b"])     # MLA
+def test_model_flash_logits_match_naive(name):
+    cfg = C.smoke_config(name).with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, b=2, s=12)
+    flash, _ = prefill(params, batch,
+                       cfg.with_overrides(opt_flash_prefill=True))
+    naive, _ = prefill(params, batch,
+                       cfg.with_overrides(opt_flash_prefill=False))
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_model_flash_logits_match_naive_int8_kv():
+    """int8-KV: flash attends on the quantized K/V it writes to the cache;
+    the naive path attends at full precision and quantizes only the stored
+    cache. The logit delta is therefore genuine int8 quantization error —
+    bound it at quantization scale and demand the greedy token is unmoved
+    (the engine-level agreement contract, test_paged_scheduler)."""
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(
+        dtype="float32", kv_cache_int8=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, b=2, s=12)
+    flash, _ = prefill(params, batch,
+                       cfg.with_overrides(opt_flash_prefill=True))
+    naive, _ = prefill(params, batch,
+                       cfg.with_overrides(opt_flash_prefill=False))
+    flash, naive = np.asarray(flash), np.asarray(naive)
+    assert np.abs(flash - naive).max() < 0.1
+    np.testing.assert_array_equal(flash[:, -1].argmax(-1),
+                                  naive[:, -1].argmax(-1))
+
+
+# ------------------------------------------------------------------ #
+# Paged direct-scatter prefill == dense prefill + scatter
+# ------------------------------------------------------------------ #
+def _slot_rows(kv, n_tok):
+    """Contiguous per-leaf [L, n_tok, ...] view of slot 0's blocks."""
+    ids = jnp.asarray(kv.slot_blocks[0], jnp.int32)
+    out = []
+    for leaf in jax.tree.leaves(kv.pools):
+        g = leaf[:, ids]                           # [L, m, bs, ...]
+        out.append(g.reshape((g.shape[0], -1) + g.shape[3:])[:, :n_tok])
+    return out
+
+
+def test_paged_direct_scatter_matches_dense_scatter():
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, b=1, s=12)
+    n_tok = 12
+
+    kv_a = PagedKVCache(cfg, n_slots=1, n_blocks=8, block_size=8,
+                        max_blocks_per_seq=4)
+    while len(kv_a.slot_blocks[0]) < kv_a.blocks_for_tokens(n_tok):
+        assert kv_a.grow(0)
+    last_a, kv_a.pools = prefill_paged(params, kv_a.pools, batch,
+                                       jnp.int32(n_tok), kv_a.tables[0:1],
+                                       cfg)
+
+    kv_b = PagedKVCache(cfg, n_slots=1, n_blocks=8, block_size=8,
+                        max_blocks_per_seq=4)
+    last_b, dense = prefill(params, batch, cfg, pad_to=16)
+    kv_b.scatter_prefill(0, dense, n_tok)
+
+    np.testing.assert_allclose(np.asarray(last_a), np.asarray(last_b),
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(_slot_rows(kv_a, n_tok), _slot_rows(kv_b, n_tok)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# Autotuner: deterministic winners, canonical serialization, precedence
+# ------------------------------------------------------------------ #
+def test_autotune_deterministic_and_roundtrips(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_TILE_BQ", raising=False)
+    monkeypatch.delenv("REPRO_TILE_BK", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    keys = [("pallas-interpret", "flash_prefill", 64, "fp32", 512),
+            ("pallas-interpret", "flash_qprefill", 64, "int8", 512),
+            ("pallas-tpu", "flash_prefill", 128, "fp32", 2048)]
+    try:
+        autotune.reset()
+        t1 = [autotune.tile_config(*k) for k in keys]
+        s1 = autotune.serialize_table()
+        autotune.reset()
+        t2 = [autotune.tile_config(*k) for k in keys]
+        assert t1 == t2
+        assert autotune.serialize_table() == s1    # byte-identical rerun
+
+        path = str(tmp_path / "winners.json")
+        autotune.save_table(path)
+        autotune.reset()
+        assert autotune.load_table(path) == len(keys)
+        assert autotune.serialize_table() == s1    # save/load roundtrip
+
+        # precedence: in-code pin beats the cached winner...
+        autotune.pin(*keys[0], 32, 64)
+        assert autotune.tile_config(*keys[0]) == (32, 64)
+        # ...and the env pin beats everything
+        monkeypatch.setenv("REPRO_TILE_BQ", "16")
+        monkeypatch.setenv("REPRO_TILE_BK", "16")
+        assert autotune.tile_config(*keys[0]) == (16, 16)
+    finally:
+        autotune.reset()
+
+
+def test_autotune_seq_buckets_share_keys():
+    """Seq lens in the same pow2 bucket resolve to one cache key (one
+    sweep, one table entry), different buckets to different keys."""
+    a = autotune.cache_key("pallas-tpu", "flash_prefill", 64, "fp32", 300)
+    b = autotune.cache_key("pallas-tpu", "flash_prefill", 64, "fp32", 512)
+    c = autotune.cache_key("pallas-tpu", "flash_prefill", 64, "fp32", 513)
+    assert a == b
+    assert b != c

@@ -72,14 +72,16 @@ def test_percentile_interpolates_like_numpy():
 def test_generate_prefill_pads_to_pow2_bucket():
     """generate() must trace one prefill shape per power-of-two bucket,
     not one per prompt length (recompile churn on heterogeneous prompts),
-    while leaving outputs identical."""
+    while leaving outputs identical. Since the flash-prefill PR the *token*
+    axis is bucket-padded too (dense archs), so all four prompt lengths
+    reach the traced prefill with ONE token shape."""
     cfg, session = _session()
     shapes = []
     orig = session._prefill_bucketed
 
-    def spy(p, b, pad):
+    def spy(p, b, nv, pad):
         shapes.append((b["tokens"].shape[1], pad))
-        return orig(p, b, pad)
+        return orig(p, b, nv, pad)
 
     session._prefill_bucketed = spy
     key = jax.random.PRNGKey(0)
@@ -90,7 +92,9 @@ def test_generate_prefill_pads_to_pow2_bucket():
             n_new=2)
     pads = {pad for _, pad in shapes}
     assert pads == {16}                        # all four lengths share one
-    assert all((s + 2) <= pad for s, pad in shapes)
+    # token axis padded to one traced shape per bucket (<= cache pad)
+    assert {tok for tok, _ in shapes} == {16}
+    assert all(tok <= pad for tok, pad in shapes)
     # and the padded prefill changes nothing semantically
     batch = make_batch(cfg, b=1, s=12)
     logits, _ = forward(session.params, batch, cfg)
