@@ -2,10 +2,11 @@
 
 Times the fused online-softmax flash-prefill path against the pre-flash
 naive baseline (materialized [S, S] causal softmax, ``naive_prefill_ref``)
-at a 512-token prompt, for the three kernel families the dispatcher serves:
+at a 512-token prompt, for the kernel families the dispatcher serves:
 
     gqa_fp32   grouped-query attention, f32 KV
     gqa_int8   fused-dequant int8 KV (the cache layout decode reads)
+    gqa_int4   fused-dequant int4 KV (nibble-packed, per-group f16 scales)
     mla_fp32   MLA head shape: one KV group, v-dim != qk-dim
 
 Both sides run jit-compiled on the ``pallas-interpret`` backend's *timed*
@@ -16,6 +17,14 @@ itself is covered by the parity tests at small S). Per case it reports
     prefill_tok_s   flash prefill throughput      (gated, higher is better)
     flash_speedup   naive_us / flash_us           (gated, higher is better)
     int8_speedup    fp32 flash_us / int8 flash_us (gated, higher is better)
+    int4_speedup    int8 / int4 KV-stream bytes per decoded token (gated,
+                    higher is better) — the DETERMINISTIC bandwidth-bound
+                    decode speedup bound: paged decode reads the whole KV
+                    cache per step, so on HBM-bandwidth-bound shapes the
+                    step-time ratio approaches the byte ratio. The wall
+                    ratio on this host (``int4_wall_us_ratio``, CPU
+                    interpret path, compute-bound, non-representative) is
+                    exported ungated alongside.
 
 plus roofline-style flops/bytes estimates, and records the autotuner's
 winning block shapes (``kernels.autotune``) so the report doubles as the
@@ -36,17 +45,24 @@ import jax.numpy as jnp
 from repro.kernels import autotune
 from repro.kernels import ops
 from repro.kernels import ref as _ref
+from repro.kernels.quantize import (dequantize_kv_int4, kv_group_size,
+                                    quantize_kv_int4)
 
 SEQ_LEN = 512
 BATCH = 1
 BACKEND = "pallas-interpret"
 
-#: name -> (n_q_heads, n_kv_heads, head_dim, v_dim, int8_kv)
+#: name -> (n_q_heads, n_kv_heads, head_dim, v_dim, kv precision)
 CASES = {
-    "gqa_fp32": (8, 2, 64, 64, False),
-    "gqa_int8": (8, 2, 64, 64, True),
-    "mla_fp32": (8, 8, 64, 96, False),
+    "gqa_fp32": (8, 2, 64, 64, "fp32"),
+    "gqa_int8": (8, 2, 64, 64, "int8"),
+    "gqa_int4": (8, 2, 64, 64, "int4"),
+    "mla_fp32": (8, 8, 64, 96, "fp32"),
 }
+
+#: precision -> flash kernel the dispatcher serves for it
+KERNELS = {"fp32": "flash_prefill", "int8": "flash_qprefill",
+           "int4": "flash_q4prefill"}
 
 
 def _quantize(t):
@@ -77,8 +93,26 @@ def _median_us(fn, args, iters: int) -> float:
     return ts[len(ts) // 2]
 
 
+def _kv_elem_bytes(d: int, precision: str) -> float:
+    """Stored bytes per KV element at head_dim/v_dim ``d``: payload plus
+    the amortized scale row (int8: per-head f32; int4: per-group f16)."""
+    if precision == "int8":
+        return 1 + 4 / d
+    if precision == "int4":
+        return 0.5 + 2 / kv_group_size(d)
+    return 4.0
+
+
+def _kv_stream_bytes(hkv: int, hd: int, dv: int, precision: str) -> float:
+    """Per-token KV bytes a decode step streams from HBM — the quantity
+    the bandwidth-bound ``int4_speedup`` model ratios (paged decode reads
+    the whole cache each step, so bytes/token IS the roofline)."""
+    return hkv * (hd * _kv_elem_bytes(hd, precision)
+                  + dv * _kv_elem_bytes(dv, precision))
+
+
 def _roofline(hq: int, hkv: int, hd: int, dv: int,
-              int8_kv: bool) -> Dict[str, float]:
+              precision: str) -> Dict[str, float]:
     """Analytic flops/bytes for the flash path (causal tile fraction) —
     deterministic bookkeeping, not a measurement."""
     s, b = SEQ_LEN, BATCH
@@ -87,9 +121,9 @@ def _roofline(hq: int, hkv: int, hd: int, dv: int,
     pairs = sum(qi + 1 for qi in range(n))            # causal tile pairs
     frac = pairs * t * t / (s * s)
     flops = 2.0 * b * s * s * hq * (hd + dv) * frac
-    kv_b = 1 + 4 / hd if int8_kv else 4               # payload + scale row
-    bytes_ = b * s * (hq * hd * 4 + hkv * hd * kv_b
-                      + hkv * dv * kv_b + hq * dv * 4)
+    bytes_ = b * s * (hq * hd * 4 + hkv * hd * _kv_elem_bytes(hd, precision)
+                      + hkv * dv * _kv_elem_bytes(dv, precision)
+                      + hq * dv * 4)
     return {"flops": flops, "bytes": bytes_,
             "arith_intensity": flops / bytes_}
 
@@ -110,36 +144,50 @@ def run(fast: bool = False, autotune_cache: Optional[str] = None,
     flash_fp = jax.jit(lambda q, k, v: ops.flash_prefill(q, k, v))
     flash_q = jax.jit(
         lambda q, ki, ks, vi, vs: ops.flash_qprefill(q, ki, ks, vi, vs))
+    flash_q4 = jax.jit(
+        lambda q, ki, ks, vi, vs: ops.flash_q4prefill(q, ki, ks, vi, vs))
     naive = jax.jit(_ref.naive_prefill_ref)
-    fp32_flash_us: Dict[str, float] = {}
-    for name, (hq, hkv, hd, dv, int8_kv) in CASES.items():
+    case_flash_us: Dict[str, float] = {}
+    for name, (hq, hkv, hd, dv, precision) in CASES.items():
         q, k, v = _inputs(hq, hkv, hd, dv)
-        kernel = "flash_qprefill" if int8_kv else "flash_prefill"
-        precision = "int8" if int8_kv else "fp32"
+        kernel = KERNELS[precision]
         tiles[autotune.cache_key(BACKEND, kernel, hd, precision, SEQ_LEN)] = \
             list(autotune.tile_config(BACKEND, kernel, hd, precision, SEQ_LEN))
-        if int8_kv:
+        if precision == "int8":
             ki, ks = _quantize(k)
             vi, vs = _quantize(v)
             naive_args = (q, ki.astype(jnp.float32) * ks[..., None],
                           vi.astype(jnp.float32) * vs[..., None])
             flash_fn, flash_args = flash_q, (q, ki, ks, vi, vs)
+        elif precision == "int4":
+            ki, ks = quantize_kv_int4(k)
+            vi, vs = quantize_kv_int4(v)
+            naive_args = (q, dequantize_kv_int4(ki, ks),
+                          dequantize_kv_int4(vi, vs))
+            flash_fn, flash_args = flash_q4, (q, ki, ks, vi, vs)
         else:
             naive_args = (q, k, v)
             flash_fn, flash_args = flash_fp, (q, k, v)
         naive_us = _median_us(naive, naive_args, iters)
         with use_backend(BACKEND):
             flash_us = _median_us(flash_fn, flash_args, iters)
+        case_flash_us[name] = flash_us
         tok_s = BATCH * SEQ_LEN / (flash_us * 1e-6)
         m = {"naive_us": naive_us, "flash_us": flash_us,
              "prefill_tok_s": tok_s, "flash_speedup": naive_us / flash_us}
-        if int8_kv:
-            base = fp32_flash_us.get(name.replace("int8", "fp32"))
+        if precision == "int8":
+            base = case_flash_us.get(name.replace("int8", "fp32"))
             if base:
                 m["int8_speedup"] = base / flash_us
-        else:
-            fp32_flash_us[name] = flash_us
-        m.update(_roofline(hq, hkv, hd, dv, int8_kv))
+        elif precision == "int4":
+            m["kv_stream_bytes_int8"] = _kv_stream_bytes(hkv, hd, dv, "int8")
+            m["kv_stream_bytes_int4"] = _kv_stream_bytes(hkv, hd, dv, "int4")
+            m["int4_speedup"] = (m["kv_stream_bytes_int8"]
+                                 / m["kv_stream_bytes_int4"])
+            base = case_flash_us.get(name.replace("int4", "int8"))
+            if base:
+                m["int4_wall_us_ratio"] = base / flash_us
+        m.update(_roofline(hq, hkv, hd, dv, precision))
         variants[name] = m
         lines.append(f"kernels_flash_{name},{flash_us:.1f},"
                      f"speedup={m['flash_speedup']:.2f}x")
@@ -155,7 +203,7 @@ def run(fast: bool = False, autotune_cache: Optional[str] = None,
         "iters": iters,
         "backend": BACKEND,
         "cases": {n: {"n_heads": c[0], "n_kv_heads": c[1], "head_dim": c[2],
-                      "v_dim": c[3], "int8_kv": c[4]}
+                      "v_dim": c[3], "precision": c[4]}
                   for n, c in CASES.items()},
         "autotune_winners": tiles,
     }

@@ -10,6 +10,11 @@ Variants are built declaratively through the ``repro.api`` surface
 ``InferenceSession`` pinned to the XLA-fast 'ref' kernel backend via the
 Backend registry (no env-var toggles in the hot path).
 
+A ``kv_precision`` section extends the paper's weight-quantization table to
+the KV-cache tiers (int8 per-head scales, int4 nibble-packed per-group f16
+scales): same fp32 weights, quantized cache, reporting top-1 agreement,
+logit cosine, max logit delta and bytes/token vs the fp32 cache.
+
 Run via ``python -m benchmarks.run``.
 """
 from __future__ import annotations
@@ -106,6 +111,30 @@ def run(iters: int = 10) -> Tuple[List[str], Dict[str, Any]]:
         results[name].update(top1_agreement_pct=top1 * 100, cosine_vs_fp32=cos)
         lines.append(f"quant_accuracy_{name},{top1*100:.1f},"
                      f"top1_agreement_pct cosine={cos:.5f}")
+    # KV-cache precision tiers: fp32 weights, quantized cache
+    from repro.serving.kvcache import kv_bytes_per_token
+
+    kv_results: Dict[str, Dict[str, float]] = {}
+    fp_bytes = kv_bytes_per_token(cfg)
+    for tier in ("int8", "int4"):
+        cfg_t = cfg.with_overrides(kv_cache_precision=tier)
+        session = ModelArtifact.create(
+            BENCH_ARCH, "bench", params, cfg_t).session(backend=BACKEND)
+        l = session.logits(probe)
+        top1 = float(jnp.mean(jnp.argmax(l, -1) == jnp.argmax(ref, -1)))
+        cos = float(jnp.sum(l * ref) /
+                    (jnp.linalg.norm(l) * jnp.linalg.norm(ref)))
+        kv_results[f"kv_{tier}"] = {
+            "top1_agreement_pct": top1 * 100,
+            "cosine_vs_fp32": cos,
+            "max_logit_delta": float(jnp.max(jnp.abs(l - ref))),
+            "kv_bytes_per_token": kv_bytes_per_token(cfg_t),
+            "kv_bytes_vs_fp32": kv_bytes_per_token(cfg_t) / fp_bytes,
+        }
+        lines.append(
+            f"quant_kv_{tier},{top1*100:.1f},top1_agreement_pct "
+            f"cosine={cos:.5f} "
+            f"bytes_per_tok={kv_bytes_per_token(cfg_t)}")
     payload = {"arch": BENCH_ARCH, "backend": BACKEND, "iters": iters,
-               "variants": results}
+               "variants": results, "kv_precision": kv_results}
     return lines, payload

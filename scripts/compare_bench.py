@@ -18,6 +18,10 @@ metric regresses by more than ``--threshold`` (default 20%):
     prefill_tok_s               lower is worse   (kernels, flash prefill)
     flash_speedup               lower is worse   (kernels, vs naive)
     int8_speedup                lower is worse   (kernels, vs fp32 flash)
+    int4_speedup                lower is worse   (kernels, modeled int8/int4
+                                                 KV-stream byte ratio)
+    kv_bytes_ratio_int4_int8    higher is worse  (serving, int4 tier bytes
+                                                 per request vs int8)
 
 All other shared metrics are printed as informational deltas. Deliberately
 dependency-free and repo-import-free so CI can run it against a downloaded
@@ -36,7 +40,8 @@ GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower",
          "acceptance_rate": "higher", "accepted_tokens_per_step": "higher",
          "rollout_convergence_s": "lower", "fleet_p99_latency_ms": "lower",
          "prefill_tok_s": "higher", "flash_speedup": "higher",
-         "int8_speedup": "higher"}
+         "int8_speedup": "higher", "int4_speedup": "higher",
+         "kv_bytes_ratio_int4_int8": "lower"}
 
 
 def flatten(node, prefix: str = "") -> Dict[str, float]:

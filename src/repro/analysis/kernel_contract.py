@@ -1,5 +1,5 @@
-"""Kernel-contract passes (KC0xx dispatch, KC1xx BlockSpec, KC2xx int8,
-KC3xx verify family + parity tests).
+"""Kernel-contract passes (KC0xx dispatch, KC1xx BlockSpec, KC2xx
+payload/scale pairing, KC3xx verify family + parity tests).
 
 Every kernel the ``Backend`` registry exposes is a three-legged contract:
 the backend *method* (the API), a pure-jnp *ref oracle* in
@@ -21,9 +21,10 @@ KC101–KC103   ``pl.BlockSpec`` consistency: index-map output rank ==
               rank (+ scalar-prefetch count); block-table subscripts in
               index maps are clamped (``jnp.maximum(tabs[b, m], 0)``) so
               ``-1`` entries hit the reserved trash block, never OOB.
-KC201         int8 payloads travel with their scales: ``*_i8``/``*_int8``
-              params (and ``*_pool`` params of q-variants) must pair with
-              a ``*_s``/``*_scale`` param in the same signature.
+KC201         quantized payloads travel with their scales: ``*_i8``/
+              ``*_int8`` params and the int4 packed layout's ``*_i4``/
+              ``*_int4`` params (and ``*_pool`` params of q-variants) must
+              pair with a ``*_s``/``*_scale`` param in the same signature.
 KC301/KC302   the model-level verify family (spec decode) keeps its
               dense/paged signatures aligned, and each kernel family's
               parity test exists and actually names the kernels it covers.
@@ -45,9 +46,9 @@ CLAMP_CALLS = {"jax.numpy.maximum", "jax.numpy.clip", "jax.numpy.where"}
 PARITY_TESTS = {
     "decode": ("tests/test_kernels.py", ("qdecode",)),
     "flash_prefill": ("tests/test_flash_prefill.py",
-                      ("flash_prefill", "flash_qprefill")),
+                      ("flash_prefill", "flash_qprefill", "flash_q4prefill")),
     "paged_attn": ("tests/test_paged_attention.py",
-                   ("paged_decode", "paged_qdecode")),
+                   ("paged_decode", "paged_qdecode", "paged_q4decode")),
     "qmatmul": ("tests/test_kernels.py",
                 ("qmatmul_static", "qmatmul_dynamic", "quantize_weights")),
     "verify": ("tests/test_spec_decode.py", ("verify_step",)),
@@ -60,6 +61,8 @@ METHOD_FAMILY = {
     "flash_qprefill": "flash_prefill",
     "paged_decode": "paged_attn",
     "paged_qdecode": "paged_attn",
+    "paged_q4decode": "paged_attn",
+    "flash_q4prefill": "flash_prefill",
     "qmatmul_static": "qmatmul",
     "qmatmul_dynamic": "qmatmul",
     "quantize_weights": "qmatmul",
@@ -314,9 +317,15 @@ def _check_clamped(ctx, spec_node, index_map, prefetch_names
 
 
 # ------------------------------------------------------------------ #
-# KC201 — int8 payload/scale pairing
+# KC201 — quantized payload/scale pairing (int8 scalars, int4 groups)
 # ------------------------------------------------------------------ #
-_PAIR_SUFFIXES = (("_i8", ("_s", "_scale")), ("_int8", ("_scale", "_s")))
+# int4 payloads are nibble-packed (two codes per byte along head_dim) with
+# per-group scales, but the pairing rule is identical: the packed bytes are
+# meaningless without their scale tensor riding the same signature.
+_PAIR_SUFFIXES = (
+    ("_i8", ("_s", "_scale")), ("_int8", ("_scale", "_s")),
+    ("_i4", ("_s", "_scale")), ("_int4", ("_scale", "_s")),
+)
 
 
 @file_pass
@@ -334,18 +343,18 @@ def kc2_int8_pairs(ctx: FileContext) -> Iterator[Finding]:
                     if not any(base + s in params for s in scale_suffixes):
                         yield ctx.finding(
                             "KC201", SLUG, node,
-                            f"{node.name}() takes int8 payload {p!r} with "
-                            f"no matching scale param "
-                            f"({base}_scale / {base}_s) — int8 tensors "
+                            f"{node.name}() takes quantized payload {p!r} "
+                            f"with no matching scale param "
+                            f"({base}_scale / {base}_s) — quantized tensors "
                             f"must travel with their dequant scales")
             if is_q_variant and p.endswith("_pool"):
                 base = p[:-len("_pool")]
                 if base + "_scale" not in params:
                     yield ctx.finding(
                         "KC201", SLUG, node,
-                        f"{node.name}() is an int8 variant but pool param "
-                        f"{p!r} has no {base}_scale — payload/scale pools "
-                        f"must stay paired")
+                        f"{node.name}() is a quantized variant but pool "
+                        f"param {p!r} has no {base}_scale — payload/scale "
+                        f"pools must stay paired")
 
 
 # ------------------------------------------------------------------ #

@@ -2,7 +2,8 @@
 
 A ``Backend`` implements the compute primitives the model layers dispatch
 to (``qmatmul_static`` / ``qmatmul_dynamic`` / ``quantize_weights`` /
-``qdecode``, the paged decode pair, and the fused flash-prefill pair).
+``qdecode``, the paged decode trio, and the fused flash-prefill trio —
+fp / int8 / int4 precision tiers for the latter two).
 Three backends ship built-in:
 
     ref              pure-jnp oracles (fast under XLA on CPU)
@@ -56,10 +57,17 @@ class Backend:
     def paged_qdecode(self, q, k_pool, k_scale, v_pool, v_scale, tables, pos):
         raise NotImplementedError
 
+    def paged_q4decode(self, q, k_pool, k_scale, v_pool, v_scale, tables,
+                       pos):
+        raise NotImplementedError
+
     def flash_prefill(self, q, k, v):
         raise NotImplementedError
 
     def flash_qprefill(self, q, k_i8, k_s, v_i8, v_s):
+        raise NotImplementedError
+
+    def flash_q4prefill(self, q, k_i4, k_s, v_i4, v_s):
         raise NotImplementedError
 
     def __repr__(self) -> str:
@@ -91,11 +99,19 @@ class RefBackend(Backend):
         return _ref.paged_qdecode_ref(q, k_pool, k_scale, v_pool, v_scale,
                                       tables, pos)
 
+    def paged_q4decode(self, q, k_pool, k_scale, v_pool, v_scale, tables,
+                       pos):
+        return _ref.paged_q4decode_ref(q, k_pool, k_scale, v_pool, v_scale,
+                                       tables, pos)
+
     def flash_prefill(self, q, k, v):
         return _ref.flash_prefill_ref(q, k, v)
 
     def flash_qprefill(self, q, k_i8, k_s, v_i8, v_s):
         return _ref.flash_qprefill_ref(q, k_i8, k_s, v_i8, v_s)
+
+    def flash_q4prefill(self, q, k_i4, k_s, v_i4, v_s):
+        return _ref.flash_q4prefill_ref(q, k_i4, k_s, v_i4, v_s)
 
 
 class PallasBackend(Backend):
@@ -141,6 +157,14 @@ class PallasBackend(Backend):
                                            v_scale, tables, pos,
                                            interpret=self.interpret)
 
+    def paged_q4decode(self, q, k_pool, k_scale, v_pool, v_scale, tables,
+                       pos):
+        from repro.kernels import paged_attn as _pa
+
+        return _pa.paged_q4decode_attention(q, k_pool, k_scale, v_pool,
+                                            v_scale, tables, pos,
+                                            interpret=self.interpret)
+
     def flash_prefill(self, q, k, v):
         # block shapes come from the deterministic autotuner (winner table
         # keyed per backend/head-dim/precision/seq bucket; REPRO_TILE_* pins)
@@ -161,6 +185,16 @@ class PallasBackend(Backend):
         return _fp.flash_qprefill_attention(q, k_i8, k_s, v_i8, v_s,
                                             block_q=bq, block_k=bk,
                                             interpret=self.interpret)
+
+    def flash_q4prefill(self, q, k_i4, k_s, v_i4, v_s):
+        from repro.kernels import autotune as _at
+        from repro.kernels import flash_prefill as _fp
+
+        bq, bk = _at.tile_config(self.name, "flash_q4prefill", q.shape[-1],
+                                 "int4", q.shape[1])
+        return _fp.flash_q4prefill_attention(q, k_i4, k_s, v_i4, v_s,
+                                             block_q=bq, block_k=bk,
+                                             interpret=self.interpret)
 
 
 # ------------------------------------------------------------------ #

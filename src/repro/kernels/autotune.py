@@ -68,7 +68,9 @@ def _causal_pairs(s: int, bq: int, bk: int) -> int:
 def _cost(s: int, bq: int, bk: int, head_dim: int, precision: str) -> float:
     nq, nk = -(-s // bq), -(-s // bk)
     pairs = _causal_pairs(s, bq, bk)
-    kv_bytes = 1 if precision == "int8" else 4
+    # int8: 1 byte/elem; int4: packed nibbles, 0.5 byte/elem (per-group
+    # scales are amortized over the group and ignored here); else f32
+    kv_bytes = {"int8": 1.0, "int4": 0.5}.get(precision, 4.0)
     # two dots per tile pair (scores + accumulate) at f32 throughput
     compute = pairs * (2.0 * bq * bk * head_dim * 2.0)
     traffic = pairs * (bq * head_dim * 4 + 2 * bk * head_dim * kv_bytes)

@@ -14,15 +14,20 @@ host: ``q [B, S, Hq, hd]`` becomes ``[B, Hkv, S*G, hd]`` with row
 (``block_q * G`` rows) and shares its KV tile stream. MLA lands here with
 ``G = 1`` and a value head dim that may differ from ``hd``.
 
-Two variants share the machinery (mirroring ``paged_attn``):
+Three variants share the machinery (mirroring ``paged_attn``):
 
     flash_prefill_attention    fp32/bf16 K/V
     flash_qprefill_attention   int8 K/V + per-(pos, head) f32 scales,
                                dequant fused into the dots
+    flash_q4prefill_attention  int4 K/V packed two codes per byte along
+                               head_dim + per-(pos, head, group) f32
+                               scales; nibbles unpack + dequantize in VMEM
 
 Shapes (model layout in, model layout out):
     q            [B, S, Hq, hd]
-    k            [B, S, Hkv, hd]     (int8 variant: int8 + scale [B, S, Hkv])
+    k            [B, S, Hkv, hd]     (int8 variant: int8 + scale [B, S, Hkv];
+                                      int4: [B, S, Hkv, hd // 2] packed +
+                                      scale [B, S, Hkv, hd // group])
     v            [B, S, Hkv, dv]
     out          [B, S, Hq, dv]      f32
 
@@ -41,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quantize import dequantize_kv_int4
 
 NEG_INF = -2.0e38
 RUN_INIT = -1.0e30          # running-max seed (fits f32 after subtraction)
@@ -138,6 +145,37 @@ def _q_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
         # accumulator is shared with fp (paged_attn precedent)
         _accumulate(scores, v * vs[:, None], o_ref, acc_ref, m_ref, l_ref,
                     ki, last)
+
+
+def _q4_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+               acc_ref, m_ref, l_ref, *, g, bq, bk, s, nk):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+    rows = q_ref.shape[2]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, RUN_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_last = qi * bq + bq - 1
+    last = jnp.minimum(nk - 1, q_last // bk)
+
+    @pl.when(ki * bk <= q_last)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        # unpack nibbles + per-group dequant in VMEM; only the packed bytes
+        # and the [bk, n_groups] scales crossed HBM
+        k = dequantize_kv_int4(k_ref[0, 0], ks_ref[0, 0])     # [bk, hd]
+        v = dequantize_kv_int4(v_ref[0, 0], vs_ref[0, 0])     # [bk, dv]
+        hd = q.shape[-1]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+        q_pos, k_pos = _positions(qi, ki, g, bq, bk, rows)
+        scores = jnp.where((k_pos <= q_pos) & (k_pos < s), scores, NEG_INF)
+        _accumulate(scores, v, o_ref, acc_ref, m_ref, l_ref, ki, last)
 
 
 def _pad_seq(x, target):
@@ -247,6 +285,36 @@ def flash_qprefill_attention(q, k_i8, k_scale, v_i8, v_scale, *,
     out = _call(kernel, qr,
                 [(kr, _kv_spec(bk, hd)), (ksr, _kscale_spec(bk)),
                  (vr, _kv_spec(bk, dv)), (vsr, _kscale_spec(bk))],
+                b=b, hkv=hkv, g=g, bq=bq, bk=bk, nq=nq, nk=nk, dv=dv,
+                interpret=interpret)
+    return _merge_heads(out, b, nq * bq, hkv, g, dv, s)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def flash_q4prefill_attention(q, k_i4, k_scale, v_i4, v_scale, *,
+                              block_q=None, block_k=None,
+                              interpret: bool = False):
+    """int4-KV fused-dequant flash prefill: packed payloads
+    [B, S, Hkv, hd // 2] + per-group scales [B, S, Hkv, hd // group]."""
+    b, s, hq, hd = q.shape
+    hkv, dv = k_i4.shape[2], v_i4.shape[3] * 2
+    if interpret and s > INTERPRET_MAX_SEQ:
+        from repro.kernels import ref as _ref
+        return _ref.flash_q4prefill_ref(q, k_i4, k_scale, v_i4, v_scale)
+    g = hq // hkv
+    bq, bk = _clip_blocks(s, block_q, block_k)
+    nq, nk = -(-s // bq), -(-s // bk)
+    sk = nk * bk
+    ng = k_scale.shape[-1]
+    qr, (kr, ksr, vr, vsr) = _split_heads(
+        _pad_seq(q, nq * bq),
+        [_pad_seq(k_i4, sk), _pad_seq(k_scale, sk),
+         _pad_seq(v_i4, sk), _pad_seq(v_scale, sk)], hkv)
+    kernel = functools.partial(_q4_kernel, g=g, bq=bq, bk=bk, s=s, nk=nk)
+    out = _call(kernel, qr,
+                [(kr, _kv_spec(bk, hd // 2)), (ksr, _kv_spec(bk, ng)),
+                 (vr, _kv_spec(bk, dv // 2)), (vsr, _kv_spec(bk, ng))],
                 b=b, hkv=hkv, g=g, bq=bq, bk=bk, nq=nq, nk=nk, dv=dv,
                 interpret=interpret)
     return _merge_heads(out, b, nq * bq, hkv, g, dv, s)

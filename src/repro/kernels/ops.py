@@ -81,6 +81,13 @@ def paged_qdecode(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
                                     tables, pos)
 
 
+def paged_q4decode(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+    """int4-KV paged decode attention: packed payload pools
+    [N,bs,Hkv,hd//2] int8 + per-group scale pools [N,bs,Hkv,hd//g] f32."""
+    return _backend().paged_q4decode(q, k_pool, k_scale, v_pool, v_scale,
+                                     tables, pos)
+
+
 def flash_prefill(q, k, v):
     """Fused online-softmax causal prefill attention.
 
@@ -93,3 +100,9 @@ def flash_prefill(q, k, v):
 def flash_qprefill(q, k_i8, k_s, v_i8, v_s):
     """int8-KV fused-dequant flash prefill; scales [B,S,Hkv] f32."""
     return _backend().flash_qprefill(q, k_i8, k_s, v_i8, v_s)
+
+
+def flash_q4prefill(q, k_i4, k_s, v_i4, v_s):
+    """int4-KV fused-dequant flash prefill: packed payloads
+    [B,S,Hkv,hd//2] int8 + per-group scales [B,S,Hkv,hd//g] f32."""
+    return _backend().flash_q4prefill(q, k_i4, k_s, v_i4, v_s)

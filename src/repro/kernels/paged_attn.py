@@ -12,17 +12,23 @@ Softmax is accumulated online across the ``M`` (innermost, sequential) grid
 dimension flash-attention style, with running max / normalizer / weighted
 accumulator in VMEM scratch.
 
-Two variants share the machinery:
+Three variants share the machinery:
 
     paged_decode_attention    fp32/bf16 pools
     paged_qdecode_attention   int8 pools + per-(block, slot, head) f32
                               scales, dequant fused into the dots (HBM
                               traffic: 1 byte/elem, same scheme as qdecode)
+    paged_q4decode_attention  int4 pools (two codes per byte, packed along
+                              head_dim) + per-(block, slot, head, group)
+                              f32 scales; nibbles unpack and dequantize in
+                              VMEM (HBM traffic: 0.5 byte/elem)
 
 Shapes:
     q           [B, Hkv, G, hd]    (G = query heads per kv head)
-    k/v pool    [N, bs, Hkv, hd]   (bs = tokens per block)
-    k/v scales  [N, bs, Hkv]       (int8 variant)
+    k/v pool    [N, bs, Hkv, hd]   (bs = tokens per block;
+                                    int4: [N, bs, Hkv, hd // 2] packed)
+    k/v scales  [N, bs, Hkv]       (int8 variant;
+                                    int4: [N, bs, Hkv, hd // group])
     tables      [B, M] int32       (-1 = unallocated, clamped + masked)
     pos         [B]   int32        (current write position, inclusive)
     out         [B, Hkv, G, hd]    f32
@@ -35,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quantize import dequantize_kv_int4
 
 NEG_INF = -2.0e38
 RUN_INIT = -1.0e30          # running-max seed (fits f32 after subtraction)
@@ -107,6 +115,25 @@ def _q_kernel(tables_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
                 pl.num_programs(2) - 1)
 
 
+def _q4_kernel(tables_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+               o_ref, acc_ref, m_ref, l_ref):
+    bi, mi = pl.program_id(0), pl.program_id(2)
+    bs = k_ref.shape[1]
+    q = q_ref[0, 0].astype(jnp.float32)
+    # unpack nibbles + per-group dequant in VMEM — the packed bytes are all
+    # that crossed HBM (kernels.quantize owns the wire layout)
+    k = dequantize_kv_int4(k_ref[0, :, 0], ks_ref[0, :, 0])   # [bs, hd]
+    v = dequantize_kv_int4(v_ref[0, :, 0], vs_ref[0, :, 0])
+    hd = q.shape[-1]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(_slot_mask(tables_ref, pos_ref, bi, mi, bs),
+                       scores, NEG_INF)
+    _accumulate(scores, v, o_ref, acc_ref, m_ref, l_ref, mi,
+                pl.num_programs(2) - 1)
+
+
 def _pool_spec(bs, hd):
     # index map args: (grid indices..., scalar-prefetch refs) — block m of
     # sequence b lives at physical pool row tables[b, m] (clamped: -1 reads
@@ -120,6 +147,13 @@ def _scale_spec(bs):
     return pl.BlockSpec(
         (1, bs, 1),
         lambda b, h, m, tabs, pos: (jnp.maximum(tabs[b, m], 0), 0, h))
+
+
+def _gscale_spec(bs, ng):
+    # int4 per-group scale pool [N, bs, Hkv, n_groups]
+    return pl.BlockSpec(
+        (1, bs, 1, ng),
+        lambda b, h, m, tabs, pos: (jnp.maximum(tabs[b, m], 0), 0, h, 0))
 
 
 def _q_spec(g, hd):
@@ -166,4 +200,19 @@ def paged_qdecode_attention(q, k_pool, k_scale, v_pool, v_scale, tables, pos,
     return _call(_q_kernel, q,
                  [(k_pool, _pool_spec(bs, hd)), (k_scale, _scale_spec(bs)),
                   (v_pool, _pool_spec(bs, hd)), (v_scale, _scale_spec(bs))],
+                 tables, pos, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_q4decode_attention(q, k_pool, k_scale, v_pool, v_scale, tables,
+                             pos, *, interpret: bool = False):
+    """int4-KV paged decode attention: packed payload pools + per-group
+    scale pools, nibble unpack + grouped dequant fused into the kernel."""
+    bs, hw = k_pool.shape[1], k_pool.shape[3]      # hw = hd // 2 (packed)
+    ng = k_scale.shape[3]
+    return _call(_q4_kernel, q,
+                 [(k_pool, _pool_spec(bs, hw)),
+                  (k_scale, _gscale_spec(bs, ng)),
+                  (v_pool, _pool_spec(bs, hw)),
+                  (v_scale, _gscale_spec(bs, ng))],
                  tables, pos, interpret)

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quantize import dequantize_kv_int4, quantize_kv_int4
+
 
 def quantize_ref(w):
     """Per-channel symmetric int8 weight quantization. w [K, N].
@@ -52,6 +54,31 @@ def quantize_kv_ref(t):
     q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
                  -127, 127).astype(jnp.int8)
     return q, scale
+
+
+def quantize_kv4_ref(t):
+    """[B,S,H,hd] -> (packed int4 [B,S,H,hd//2], scale [B,S,H,hd//g]) —
+    grouped symmetric int4, the third KV precision tier (kernels.quantize
+    owns the layout; this is the oracle-side entry point)."""
+    return quantize_kv_int4(t)
+
+
+def q4decode_ref(q, k_i4, k_s, v_i4, v_s, bias):
+    """int4-KV decode attention oracle (dense cache).
+
+    q [B,Hkv,G,hd]; k_i4/v_i4 [B,S,Hkv,hd//2] packed int8; k_s/v_s
+    [B,S,Hkv,n_groups] f32 per-group scales; bias [B,S]. Dequantize per
+    group, then the shared fp core — the fused kernels fold the very same
+    ``code * group_scale`` products into their dots."""
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = dequantize_kv_int4(k_i4, k_s)
+    vf = dequantize_kv_int4(v_i4, v_s)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qf, kf) / jnp.sqrt(hd)
+    scores = scores + bias[:, None, None, :]
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bkgs,bskh->bkgh", p, vf)
 
 
 NEG_INF = -2.0e38
@@ -108,6 +135,20 @@ def paged_qdecode_ref(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
     vsg = paged_gather(v_scale, tables)
     bias = _paged_bias(tables, pos, k_pool.shape[1])
     return qdecode_ref(q, kg, ksg, vg, vsg, bias)
+
+
+def paged_q4decode_ref(q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+    """int4-KV paged decode oracle: gather packed payloads + per-group
+    scale pools, then the contiguous int4 oracle.
+
+    k_pool/v_pool [N,bs,Hkv,hd//2] packed int8; k_scale/v_scale
+    [N,bs,Hkv,n_groups] f32."""
+    kg = paged_gather(k_pool, tables)
+    vg = paged_gather(v_pool, tables)
+    ksg = paged_gather(k_scale, tables)
+    vsg = paged_gather(v_scale, tables)
+    bias = _paged_bias(tables, pos, k_pool.shape[1])
+    return q4decode_ref(q, kg, ksg, vg, vsg, bias)
 
 
 RUN_INIT = -1.0e30          # running-max seed, shared with the kernels
@@ -190,6 +231,15 @@ def flash_qprefill_ref(q, k_i8, k_s, v_i8, v_s):
     then the shared tiled core."""
     kf = k_i8.astype(jnp.float32) * k_s[..., None]
     vf = v_i8.astype(jnp.float32) * v_s[..., None]
+    return _flash_tiles(q, kf, vf)
+
+
+def flash_q4prefill_ref(q, k_i4, k_s, v_i4, v_s):
+    """int4-KV flash-prefill oracle: per-group dequantize (the fused
+    kernel's in-VMEM nibble unpack + ``code * group_scale``), then the
+    shared tiled core. Payloads [B,S,Hkv,hd//2], scales [B,S,Hkv,hd//g]."""
+    kf = dequantize_kv_int4(k_i4, k_s)
+    vf = dequantize_kv_int4(v_i4, v_s)
     return _flash_tiles(q, kf, vf)
 
 

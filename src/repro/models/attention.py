@@ -32,7 +32,10 @@ import jax.numpy as jnp
 
 # gather / validity semantics live in ONE place (the kernel ref oracles) so
 # the model layer and the kernels cannot drift apart
-from repro.kernels.ref import paged_gather, paged_valid
+from repro.kernels.ref import paged_gather, paged_valid, q4decode_ref
+# int4 wire layout (nibble packing + per-group scales) is owned by
+# kernels.quantize — pure jnp, safe to import eagerly
+from repro.kernels.quantize import dequantize_kv_int4, quantize_kv_int4
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_rope, dense_init, linear, rms_norm
 
@@ -193,29 +196,37 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
                 pad_to: int = 0):
     """Returns (out [B,S,d], kv cache).
 
-    Cache is (k, v) [B,S_cache,Hkv,hd], or with cfg.kv_cache_int8 the 4-tuple
-    (k_i8, k_scale, v_i8, v_scale). With a window the cache is a ring buffer
+    Cache is (k, v) [B,S_cache,Hkv,hd], or for the quantized tiers
+    (``cfg.kv_precision``) the 4-tuple (k_q, k_scale, v_q, v_scale) — int8:
+    per-(slot, head) scales; int4: nibble-packed ``hd // 2`` payloads with
+    per-(slot, head, group) scales. With a window the cache is a ring buffer
     of exactly ``window`` slots (entry for position t at slot t % window);
     otherwise it is padded to ``pad_to`` so decode_step can append.
 
     Full-attention prefill dispatches to the backend's fused flash kernel
-    (``ops.flash_prefill``; with int8 KV the fused-dequant variant attends
-    over the *quantized* stream — the same values decode later reads, so
-    prefill and decode see one consistent cache)."""
+    (``ops.flash_prefill``; with a quantized KV tier the fused-dequant
+    variant attends over the *quantized* stream — the same values decode
+    later reads, so prefill and decode see one consistent cache)."""
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
+    prec = cfg.kv_precision
     q = linear(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
     k = linear(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
     v = linear(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     flash = _flash_ok(cfg, window)
-    if cfg.kv_cache_int8 and flash:
+    if prec != "fp" and flash:
         from repro.kernels import ops  # backend-dispatched flash prefill
 
-        kq, ks = _quantize_kv(k)
-        vq, vs = _quantize_kv(v)
-        out = ops.flash_qprefill(q, kq, ks, vq, vs).astype(x.dtype)
+        if prec == "int4":
+            kq, ks = quantize_kv_int4(k)
+            vq, vs = quantize_kv_int4(v)
+            out = ops.flash_q4prefill(q, kq, ks, vq, vs).astype(x.dtype)
+        else:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            out = ops.flash_qprefill(q, kq, ks, vq, vs).astype(x.dtype)
         out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
         return out, (_ring_or_pad(kq, s, window, pad_to),
                      _ring_or_pad(ks, s, window, pad_to),
@@ -231,7 +242,11 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
     out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
     kc = _ring_or_pad(k, s, window, pad_to)
     vc = _ring_or_pad(v, s, window, pad_to)
-    if cfg.kv_cache_int8:
+    if prec == "int4":
+        kq, ks = quantize_kv_int4(kc)
+        vq, vs = quantize_kv_int4(vc)
+        return out, (kq, ks, vq, vs)
+    if prec == "int8":
         kq, ks = _quantize_kv(kc)
         vq, vs = _quantize_kv(vc)
         return out, (kq, ks, vq, vs)
@@ -262,8 +277,8 @@ def gqa_prefill_paged(p, x, positions, cache, pos, tables, cfg: ModelConfig):
     exclude sliding windows — see ``serving.kvcache.paged_supported``)."""
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
-    int8_kv = cfg.kv_cache_int8
-    if int8_kv:
+    prec = cfg.kv_precision
+    if prec != "fp":
         k_pool, k_scale, v_pool, v_scale = cache
     else:
         k_pool, v_pool = cache
@@ -276,11 +291,18 @@ def gqa_prefill_paged(p, x, positions, cache, pos, tables, cfg: ModelConfig):
     blk, off = _paged_prefill_slots(tables, n_valid, s, k_pool.shape[1])
     from repro.kernels import ops  # backend-dispatched flash prefill
 
-    if int8_kv:
-        kq, ks = _quantize_kv(k)
-        vq, vs = _quantize_kv(v)
+    if prec != "fp":
+        if prec == "int4":
+            kq, ks = quantize_kv_int4(k)
+            vq, vs = quantize_kv_int4(v)
+        else:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
         if cfg.opt_flash_prefill:
-            out = ops.flash_qprefill(q, kq, ks, vq, vs).astype(x.dtype)
+            if prec == "int4":
+                out = ops.flash_q4prefill(q, kq, ks, vq, vs).astype(x.dtype)
+            else:
+                out = ops.flash_qprefill(q, kq, ks, vq, vs).astype(x.dtype)
         else:
             out = chunked_attention(q, k, v, positions,
                                     native_accum=cfg.opt_attn_accum)
@@ -333,8 +355,8 @@ def gqa_decode(p, x, cache_kv, pos, cfg: ModelConfig, window: int = 0):
     per-sequence [B] positions (continuous batching)."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
-    int8_kv = cfg.kv_cache_int8
-    if int8_kv:
+    prec = cfg.kv_precision
+    if prec != "fp":
         k_cache, k_scale, v_cache, v_scale = cache_kv
     else:
         k_cache, v_cache = cache_kv
@@ -346,9 +368,13 @@ def gqa_decode(p, x, cache_kv, pos, cfg: ModelConfig, window: int = 0):
     v = linear(p["wv"], x).reshape(b, 1, cfg.n_kv_heads, hd)
     q = apply_rope(q, pos_b, cfg.rope_theta)
     k = apply_rope(k, pos_b, cfg.rope_theta)
-    if int8_kv:
-        kq, ks = _quantize_kv(k)
-        vq, vs = _quantize_kv(v)
+    if prec != "fp":
+        if prec == "int4":
+            kq, ks = quantize_kv_int4(k)
+            vq, vs = quantize_kv_int4(v)
+        else:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
         k_cache = _batched_update(k_cache, kq, slot_vec)
         v_cache = _batched_update(v_cache, vq, slot_vec)
         k_scale = _batched_update(k_scale, ks, slot_vec)
@@ -360,7 +386,15 @@ def gqa_decode(p, x, cache_kv, pos, cfg: ModelConfig, window: int = 0):
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     group = hq // hkv
     qg = q.reshape(b, hkv, group, hd)
-    if int8_kv:
+    if prec == "int4":
+        # dense int4 decode stays at the jnp level (the Pallas int4 family
+        # covers the serving paths: paged decode, verify, flash prefill) —
+        # the ref oracle keeps the dequant semantics in one place
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        out = q4decode_ref(qg, k_cache, k_scale, v_cache, v_scale, bias)
+        out = out.astype(x.dtype).reshape(b, 1, hq * hd)
+        return linear(p["wo"], out), (k_cache, k_scale, v_cache, v_scale)
+    if prec == "int8":
         from repro.kernels import ops  # fused-dequant decode attention
 
         bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
@@ -396,8 +430,8 @@ def gqa_verify(p, x, cache_kv, pos, cfg: ModelConfig):
     Full attention only (the spec-decode gate excludes sliding windows)."""
     b, m, _ = x.shape
     hd = cfg.resolved_head_dim
-    int8_kv = cfg.kv_cache_int8
-    if int8_kv:
+    prec = cfg.kv_precision
+    if prec != "fp":
         k_cache, k_scale, v_cache, v_scale = cache_kv
     else:
         k_cache, v_cache = cache_kv
@@ -408,7 +442,17 @@ def gqa_verify(p, x, cache_kv, pos, cfg: ModelConfig):
     v = linear(p["wv"], x).reshape(b, m, cfg.n_kv_heads, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    if int8_kv:
+    if prec == "int4":
+        kq, ks = quantize_kv_int4(k)
+        vq, vs = quantize_kv_int4(v)
+        k_cache = _batched_update(k_cache, kq, pos_vec)
+        v_cache = _batched_update(v_cache, vq, pos_vec)
+        k_scale = _batched_update(k_scale, ks, pos_vec)
+        v_scale = _batched_update(v_scale, vs, pos_vec)
+        new_cache = (k_cache, k_scale, v_cache, v_scale)
+        kf = dequantize_kv_int4(k_cache, k_scale)
+        vf = dequantize_kv_int4(v_cache, v_scale)
+    elif prec == "int8":
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         k_cache = _batched_update(k_cache, kq, pos_vec)
@@ -450,8 +494,8 @@ def gqa_verify_paged(p, x, cache, pos, tables, cfg: ModelConfig):
     (``PagedKVCache.truncate``)."""
     b, m, _ = x.shape
     hd = cfg.resolved_head_dim
-    int8_kv = cfg.kv_cache_int8
-    if int8_kv:
+    prec = cfg.kv_precision
+    if prec != "fp":
         k_pool, k_scale, v_pool, v_scale = cache
     else:
         k_pool, v_pool = cache
@@ -463,7 +507,19 @@ def gqa_verify_paged(p, x, cache, pos, tables, cfg: ModelConfig):
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     blk, off = paged_verify_slots(tables, positions, block_size)
-    if int8_kv:
+    if prec == "int4":
+        kq, ks = quantize_kv_int4(k)
+        vq, vs = quantize_kv_int4(v)
+        k_pool = k_pool.at[blk, off].set(kq)
+        v_pool = v_pool.at[blk, off].set(vq)
+        k_scale = k_scale.at[blk, off].set(ks)
+        v_scale = v_scale.at[blk, off].set(vs)
+        new_cache = (k_pool, k_scale, v_pool, v_scale)
+        kf = dequantize_kv_int4(paged_gather(k_pool, tables),
+                                paged_gather(k_scale, tables))
+        vf = dequantize_kv_int4(paged_gather(v_pool, tables),
+                                paged_gather(v_scale, tables))
+    elif prec == "int8":
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         k_pool = k_pool.at[blk, off].set(kq)
@@ -565,15 +621,16 @@ def paged_write_slots(tables, pos_vec, block_size: int):
 
 
 def gqa_decode_paged(p, x, cache, pos, tables, cfg: ModelConfig):
-    """x [B,1,d]; cache: (k_pool, v_pool) [N,bs,Hkv,hd] (or the int8
-    4-tuple with per-(block, slot, head) scale pools); tables [B,M] int32;
-    pos scalar or [B]. Writes this token's K/V into its table's block, then
-    reads the whole sequence through the table via the backend's
-    paged-attention primitive."""
+    """x [B,1,d]; cache: (k_pool, v_pool) [N,bs,Hkv,hd] (or the quantized
+    4-tuple — int8: per-(block, slot, head) scale pools; int4: packed
+    ``hd // 2`` payload pools with per-(block, slot, head, group) scales);
+    tables [B,M] int32; pos scalar or [B]. Writes this token's K/V into its
+    table's block, then reads the whole sequence through the table via the
+    backend's paged-attention primitive."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
-    int8_kv = cfg.kv_cache_int8
-    if int8_kv:
+    prec = cfg.kv_precision
+    if prec != "fp":
         k_pool, k_scale, v_pool, v_scale = cache
     else:
         k_pool, v_pool = cache
@@ -591,7 +648,17 @@ def gqa_decode_paged(p, x, cache, pos, tables, cfg: ModelConfig):
 
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     qg = q.reshape(b, hkv, hq // hkv, hd)
-    if int8_kv:
+    if prec == "int4":
+        kq, ks = quantize_kv_int4(k)
+        vq, vs = quantize_kv_int4(v)
+        k_pool = k_pool.at[blk, off].set(kq[:, 0])
+        v_pool = v_pool.at[blk, off].set(vq[:, 0])
+        k_scale = k_scale.at[blk, off].set(ks[:, 0])
+        v_scale = v_scale.at[blk, off].set(vs[:, 0])
+        out = ops.paged_q4decode(qg, k_pool, k_scale, v_pool, v_scale,
+                                 tables, pos_vec)
+        new_cache = (k_pool, k_scale, v_pool, v_scale)
+    elif prec == "int8":
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         k_pool = k_pool.at[blk, off].set(kq[:, 0])

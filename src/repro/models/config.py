@@ -76,7 +76,13 @@ class ModelConfig:
                                    # cache-convert churn seen in baseline HLO)
     kv_cache_int8: bool = False    # signed-int8 KV cache with per-(slot,head)
                                    # scales; decode uses the fused-dequant
-                                   # Pallas kernel (kernels/qdecode.py)
+                                   # Pallas kernel (kernels/qdecode.py).
+                                   # Legacy shim — superseded by
+                                   # kv_cache_precision below
+    kv_cache_precision: str = ""   # "" | fp | int8 | int4 — KV-cache tier.
+                                   # "" defers to kv_cache_int8; int4 packs
+                                   # two 4-bit codes per byte with per-group
+                                   # scales (kernels/quantize.py KV_GROUP)
     opt_mla_absorb: bool = False   # weight-absorbed MLA decode: score against
                                    # the compressed c_kv stream directly
                                    # instead of re-up-projecting the cache
@@ -92,6 +98,18 @@ class ModelConfig:
     source: str = ""
 
     # ------------------------------------------------------------------ #
+    @property
+    def kv_precision(self) -> str:
+        """Resolved KV-cache tier: ``kv_cache_precision`` when set (must be
+        fp / int8 / int4), else the legacy ``kv_cache_int8`` bool."""
+        if self.kv_cache_precision:
+            if self.kv_cache_precision not in ("fp", "int8", "int4"):
+                raise ValueError(
+                    f"kv_cache_precision must be fp|int8|int4, got "
+                    f"{self.kv_cache_precision!r}")
+            return self.kv_cache_precision
+        return "int8" if self.kv_cache_int8 else "fp"
+
     @property
     def resolved_head_dim(self) -> int:
         if self.head_dim:

@@ -475,7 +475,22 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
     cl = _cache_len(cfg, seq_len)
 
     def kv(n):
-        if cfg.kv_cache_int8:
+        prec = cfg.kv_precision
+        if prec == "int4":
+            from repro.kernels.quantize import kv_group_size
+
+            ng = hd // kv_group_size(hd)
+            # nibble-packed payloads (two codes per byte along head_dim)
+            # with per-(slot, head, group) f16 scales
+            return (jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd // 2),
+                              jnp.int8),
+                    jnp.zeros((n, batch, cl, cfg.n_kv_heads, ng),
+                              jnp.float16),
+                    jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd // 2),
+                              jnp.int8),
+                    jnp.zeros((n, batch, cl, cfg.n_kv_heads, ng),
+                              jnp.float16))
+        if prec == "int8":
             return (jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd), jnp.int8),
                     jnp.zeros((n, batch, cl, cfg.n_kv_heads), jnp.float32),
                     jnp.zeros((n, batch, cl, cfg.n_kv_heads, hd), jnp.int8),

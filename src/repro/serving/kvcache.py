@@ -13,8 +13,10 @@ the paper's edge budgets (Pi-4-class devices):
 * ``PagedKVCache`` — the device-side pools (one ``[L, N, block_size, ...]``
   leaf per layer-stack cache leaf, mirroring ``repro.models.init_cache``)
   plus jnp block tables, the scatter that moves a dense batch-1 prefill
-  cache into allocated blocks, and per-block int8 storage with
-  per-(block, slot, head) scales when ``cfg.kv_cache_int8`` is set.
+  cache into allocated blocks, and quantized block storage per
+  ``cfg.kv_precision``: int8 payloads with per-(block, slot, head) scales,
+  or nibble-packed int4 payloads with per-(block, slot, head, group)
+  scales (``kernels.quantize.KV_GROUP`` head_dim elements per group).
 
 Attention reads the pools through per-request block tables
 (``repro.models.attention.gqa_decode_paged`` / ``mla_decode_paged``,
@@ -275,7 +277,9 @@ def init_paged_pools(cfg: ModelConfig, n_blocks: int,
     dense leaf ``[L, B, S, ...]`` becomes ``[L, N, block_size, ...]`` — one
     shared pool instead of per-slot reservations. int8 mode stores int8
     payloads plus per-(block, slot, head) f32 scales, exactly the layout
-    ``paged_qdecode`` consumes."""
+    ``paged_qdecode`` consumes; int4 mode stores nibble-packed ``hd // 2``
+    payloads plus per-(block, slot, head, group) scales for
+    ``paged_q4decode``."""
     why = paged_supported(cfg)
     if why is not None:
         raise ValueError(f"paged KV cache unsupported for {cfg.name}: {why}")
@@ -284,7 +288,20 @@ def init_paged_pools(cfg: ModelConfig, n_blocks: int,
     bs = block_size
 
     def kv(n):
-        if cfg.kv_cache_int8:
+        prec = cfg.kv_precision
+        if prec == "int4":
+            from repro.kernels.quantize import kv_group_size
+
+            ng = hd // kv_group_size(hd)
+            return (jnp.zeros((n, n_blocks, bs, cfg.n_kv_heads, hd // 2),
+                              jnp.int8),
+                    jnp.zeros((n, n_blocks, bs, cfg.n_kv_heads, ng),
+                              jnp.float16),
+                    jnp.zeros((n, n_blocks, bs, cfg.n_kv_heads, hd // 2),
+                              jnp.int8),
+                    jnp.zeros((n, n_blocks, bs, cfg.n_kv_heads, ng),
+                              jnp.float16))
+        if prec == "int8":
             return (jnp.zeros((n, n_blocks, bs, cfg.n_kv_heads, hd), jnp.int8),
                     jnp.zeros((n, n_blocks, bs, cfg.n_kv_heads), jnp.float32),
                     jnp.zeros((n, n_blocks, bs, cfg.n_kv_heads, hd), jnp.int8),
@@ -464,19 +481,37 @@ class PagedKVCache:
 # ------------------------------------------------------------------ #
 # Sizing helpers (fleet memory accounting)
 # ------------------------------------------------------------------ #
+def kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """Per-token, per-layer KV bytes for ``cfg``'s resolved precision tier —
+    the single accounting rule shared by ``kv_bytes_per_block`` (admission
+    budgeting, fleet ``kv_budget_bytes``) and the benchmarks'
+    ``kv_hbm_bytes_per_req``.
+
+        mla    (kv_lora_rank + qk_rope_dim) * itemsize   (no quantized tier)
+        fp     2 * Hkv * hd * itemsize
+        int8   2 * Hkv * (hd + 4)                 payload + per-head f32 scale
+        int4   2 * Hkv * (hd/2 + 2 * n_groups)    nibbles + f16 group scales
+    """
+    hd = cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        return int((cfg.kv_lora_rank + cfg.qk_rope_dim)
+                   * jnp.dtype(cfg.activation_dtype).itemsize)
+    prec = cfg.kv_precision
+    if prec == "int4":
+        from repro.kernels.quantize import kv_group_size
+
+        n_groups = hd // kv_group_size(hd)
+        return int(2 * cfg.n_kv_heads * (hd // 2 + 2 * n_groups))
+    if prec == "int8":
+        return int(2 * cfg.n_kv_heads * (hd + 4))
+    return int(2 * cfg.n_kv_heads * hd
+               * jnp.dtype(cfg.activation_dtype).itemsize)
+
+
 def kv_bytes_per_block(cfg: ModelConfig, block_size: int) -> int:
     """Per-block HBM bytes across all layers — the unit of the fleet's
     per-device KV budget (``EnginePool.kv_budget_bytes``)."""
-    hd = cfg.resolved_head_dim
-    n_layers = cfg.n_layers
-    if cfg.attention == "mla":
-        per_tok = (cfg.kv_lora_rank + cfg.qk_rope_dim) \
-            * jnp.dtype(cfg.activation_dtype).itemsize
-    elif cfg.kv_cache_int8:
-        per_tok = 2 * cfg.n_kv_heads * (hd + 4)      # int8 payload + f32 scale
-    else:
-        per_tok = 2 * cfg.n_kv_heads * hd * jnp.dtype(cfg.activation_dtype).itemsize
-    return int(n_layers * block_size * per_tok)
+    return int(cfg.n_layers * block_size * kv_bytes_per_token(cfg))
 
 
 def blocks_for_budget(cfg: ModelConfig, block_size: int,

@@ -230,7 +230,8 @@ class ContinuousBatchingEngine:
         self._spec_m = 1               # verify span (k + 1) for spec engines
         if spec is not None:
             draft_params, draft_cfg, draft_backend = spec.resolve_draft()
-            why = spec_supported(cfg, draft_cfg, spec.k)
+            why = spec_supported(cfg, draft_cfg, spec.k,
+                                 allow_moe_target=spec.allow_moe_target)
             if why is not None:
                 raise ValueError(f"speculative decoding unsupported: {why}")
             self.spec_k = spec.k

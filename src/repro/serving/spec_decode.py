@@ -55,18 +55,23 @@ RESIDUAL_TAG = 0x4E51
 class SpecConfig:
     """Speculative-decoding policy for one engine.
 
-    draft          the draft model: a ``repro.api.ModelArtifact``, an
-                   ``InferenceSession`` (its pinned backend is inherited),
-                   or a ``(params, cfg)`` tuple
-    k              draft tokens proposed per verify step (>= 1)
-    draft_backend  kernel backend for the draft's compiled entry points
-                   (default: inherit from the draft session, else the
-                   target engine's backend)
+    draft            the draft model: a ``repro.api.ModelArtifact``, an
+                     ``InferenceSession`` (its pinned backend is inherited),
+                     or a ``(params, cfg)`` tuple
+    k                draft tokens proposed per verify step (>= 1)
+    draft_backend    kernel backend for the draft's compiled entry points
+                     (default: inherit from the draft session, else the
+                     target engine's backend)
+    allow_moe_target opt-in for capacity-routed MoE targets, which verify
+                     fine but WITHOUT the greedy bit-parity guarantee (see
+                     module caveat) — off by default so the parity contract
+                     holds unless explicitly waived
     """
 
     draft: Any
     k: int = 4
     draft_backend: Any = None
+    allow_moe_target: bool = False
 
     def resolve_draft(self) -> Tuple[Any, ModelConfig, Any]:
         """-> (draft_params, draft_cfg, backend_or_None)."""
@@ -83,12 +88,18 @@ class SpecConfig:
         return params, cfg, self.draft_backend
 
 
-def spec_supported(target_cfg: ModelConfig,
-                   draft_cfg: ModelConfig, k: int) -> Optional[str]:
+def spec_supported(target_cfg: ModelConfig, draft_cfg: ModelConfig, k: int,
+                   allow_moe_target: bool = False) -> Optional[str]:
     """Why this (target, draft, k) trio cannot run speculative decoding,
     or None if it can. The verify forward shares the paged cache's
     constraints (attention-only stack, full attention, single codebook)
-    for BOTH models, and the pair must emit into one token space."""
+    for BOTH models, and the pair must emit into one token space.
+
+    Capacity-routed MoE *targets* are rejected unless ``allow_moe_target``:
+    expert capacity depends on tokens-per-pass, so a multi-token verify can
+    route differently than k single-token decodes, voiding the greedy
+    bit-parity guarantee (the module's whole point). The flag turns the
+    guarantee off knowingly rather than silently."""
     if k < 2:
         # after a fully-accepted round the draft is one token behind (it
         # never consumed its own last proposal): the next draft phase
@@ -102,6 +113,11 @@ def spec_supported(target_cfg: ModelConfig,
         if cfg.frontend != "none":
             return (f"{role} {cfg.name}: frontend conditioning is not "
                     "supported under speculative decoding yet")
+    if target_cfg.n_experts and not allow_moe_target:
+        return (f"target {target_cfg.name}: capacity-routed MoE verify has "
+                "no greedy bit-parity guarantee (expert capacity depends on "
+                "tokens-per-pass) — opt in with "
+                "SpecConfig(allow_moe_target=True)")
     if target_cfg.vocab_size != draft_cfg.vocab_size:
         return (f"vocab mismatch: target {target_cfg.vocab_size} vs "
                 f"draft {draft_cfg.vocab_size} — draft and target must "

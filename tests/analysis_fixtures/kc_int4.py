@@ -1,0 +1,16 @@
+"""KC201 fixture: int4 packed payload params travelling without scales."""
+
+
+def flash_q4prefill_missing_scale(q, k_i4, v_i4, v_s):
+    # KC201: k_i4 has no k_s / k_scale partner (v_i4 + v_s is fine)
+    return q, k_i4, v_i4, v_s
+
+
+def paged_q4decode_missing_pool_scale(q, k_pool, tables, pos):
+    # KC201: q-variant pool param without a k_scale partner
+    return q, k_pool, tables, pos
+
+
+def dequant_missing_group_scale(t_int4):
+    # KC201: packed nibbles cannot dequantize without their group scales
+    return t_int4

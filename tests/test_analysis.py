@@ -27,6 +27,7 @@ EXPECTED = {
     "kc_blockspec.py": {"KC101": 1, "KC102": 1, "KC103": 1},
     "kc_flash.py": {"KC101": 1, "KC102": 1},
     "kc_int8.py": {"KC201": 2},
+    "kc_int4.py": {"KC201": 3},
     "kernel_contract/api/backends.py": {
         "KC001": 1, "KC002": 1, "KC003": 1, "KC004": 1, "KC005": 1},
     "kernel_contract/kernels/ref.py": {},       # supporting file: clean
@@ -113,7 +114,7 @@ def test_baseline_roundtrip_and_gating(tmp_path):
     assert analysis_main([FIXTURES, "--baseline", baseline,
                           "--update-baseline"]) == 0
     entries = load_baseline(baseline)
-    assert len(entries) == 25
+    assert len(entries) == 28
     # with everything grandfathered the same scan passes
     assert analysis_main([FIXTURES, "--baseline", baseline]) == 0
     # dropping one entry resurfaces exactly that finding
@@ -157,6 +158,8 @@ def test_json_artifact_and_coverage(tmp_path):
     assert "flash_prefill_ref" in cov["flash_prefill"]["ref_oracles"]
     assert cov["flash_prefill"]["parity_test"] == "tests/test_flash_prefill.py"
     assert "paged_qdecode_ref" in cov["paged_attn"]["ref_oracles"]
+    assert "paged_q4decode_ref" in cov["paged_attn"]["ref_oracles"]
+    assert "flash_q4prefill_ref" in cov["flash_prefill"]["ref_oracles"]
     assert cov["qmatmul"]["parity_test"] == "tests/test_kernels.py"
     assert any(n.startswith("gqa_verify") for n in
                cov["verify"]["ref_oracles"])

@@ -11,8 +11,8 @@ from repro import configs as C
 from repro.models import init_params, prefill
 from repro.serving.kvcache import (BlockAllocator, PagedKVCache,
                                    blocks_for_budget, hash_prompt_blocks,
-                                   kv_bytes_per_block, paged_supported,
-                                   pow2_bucket)
+                                   kv_bytes_per_block, kv_bytes_per_token,
+                                   paged_supported, pow2_bucket)
 
 
 # ------------------------------------------------------------------ #
@@ -321,3 +321,24 @@ def test_sizing_helpers(cfg_params):
     # int8 blocks are ~4x smaller than fp32 (payload byte + f32 scale)
     per8 = kv_bytes_per_block(cfg.with_overrides(kv_cache_int8=True), 16)
     assert per8 < per / 2
+    # int4 nibbles + f16 group scales land under 0.55x int8 (the serving
+    # bench's gated kv_hbm_bytes_per_req ratio)
+    per4 = kv_bytes_per_block(
+        cfg.with_overrides(kv_cache_precision="int4"), 16)
+    assert per4 <= 0.55 * per8
+
+
+def test_kv_bytes_per_token_matches_pools():
+    """The accounting helper is the single sizing rule: for every precision
+    tier it must equal the actual per-token bytes of the pools the cache
+    allocates (nbytes summed over leaves / blocks / block_size)."""
+    base = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    for prec in ("fp", "int8", "int4"):
+        cfg = base.with_overrides(kv_cache_precision=prec)
+        kv = PagedKVCache(cfg, n_slots=1, n_blocks=4, block_size=16,
+                          max_blocks_per_seq=2)
+        leaves = jax.tree.leaves(kv.pools)
+        nbytes = sum(x.nbytes for x in leaves)
+        n_blocks = leaves[0].shape[1]
+        per_tok = nbytes // (cfg.n_layers * n_blocks * 16)
+        assert per_tok == kv_bytes_per_token(cfg), prec

@@ -298,6 +298,20 @@ def test_spec_supported_gates():
         spec_supported(cfg, other, 3) is not None
 
 
+def test_spec_supported_gates_moe_targets():
+    """Capacity-routed MoE targets void greedy bit-parity (expert capacity
+    depends on tokens-per-pass), so they are rejected unless the caller
+    opts in via ``allow_moe_target`` — which SpecConfig defaults off."""
+    cfg = C.smoke_config("mistral-nemo-12b").with_overrides(dtype="float32")
+    moe = dataclasses.replace(cfg, n_experts=4, top_k=2)
+    why = spec_supported(moe, cfg, 3)
+    assert why is not None and "bit-parity" in why
+    assert spec_supported(moe, cfg, 3, allow_moe_target=True) is None
+    # a MoE *draft* is fine either way: only its proposals are at stake
+    assert spec_supported(cfg, moe, 3) is None
+    assert SpecConfig(draft=None).allow_moe_target is False
+
+
 @pytest.mark.parametrize("spec_on", [False, True])
 @pytest.mark.parametrize("paged", [False, True])
 def test_request_finishing_at_admission_emits_exactly_one_token(
