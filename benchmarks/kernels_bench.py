@@ -128,6 +128,33 @@ def _roofline(hq: int, hkv: int, hd: int, dv: int,
             "arith_intensity": flops / bytes_}
 
 
+def _tp_roofline(hq: int, hkv: int, hd: int, dv: int, precision: str,
+                 tp: int = 2) -> Dict[str, float]:
+    """ICI-aware modeled decode step under tensor parallelism (informational,
+    ungated). Serving TP splits the kv-head axis, so each shard streams
+    ``1/tp`` of the KV cache from its own HBM; the price is the per-layer
+    "exact" combine — an all_gather of the [B, hq_local*dv] attention
+    output over the ICI links. Decode stays bandwidth-bound, so
+
+        t_tp1 = S * kv_bytes_tok / HBM_BW
+        t_tp  = t_tp1 / tp + B * hq*dv*4 * (tp-1)/tp / ICI_BW
+
+    and the modeled speedup is their ratio: near-linear while the KV
+    stream dwarfs the activation combine (it does at serving context
+    lengths), degrading exactly where the ICI term catches up."""
+    from repro.launch.mesh import HBM_BW, ICI_BW
+
+    kv_tok = _kv_stream_bytes(hkv, hd, dv, precision)
+    t1 = SEQ_LEN * BATCH * kv_tok / HBM_BW
+    ici_bytes = BATCH * hq * dv * 4 * (tp - 1) / tp
+    t_ici = ici_bytes / ICI_BW
+    t_tp = t1 / tp + t_ici
+    return {f"tp{tp}_kv_stream_bytes_per_shard": SEQ_LEN * BATCH * kv_tok
+            / tp,
+            f"tp{tp}_ici_combine_us": t_ici * 1e6,
+            f"tp{tp}_modeled_decode_speedup": t1 / t_tp}
+
+
 def run(fast: bool = False, autotune_cache: Optional[str] = None,
         ) -> Tuple[List[str], Dict[str, Any]]:
     """Returns (CSV lines, payload for ``BENCH_kernels.json``)."""
@@ -188,6 +215,7 @@ def run(fast: bool = False, autotune_cache: Optional[str] = None,
             if base:
                 m["int4_wall_us_ratio"] = base / flash_us
         m.update(_roofline(hq, hkv, hd, dv, precision))
+        m.update(_tp_roofline(hq, hkv, hd, dv, precision))
         variants[name] = m
         lines.append(f"kernels_flash_{name},{flash_us:.1f},"
                      f"speedup={m['flash_speedup']:.2f}x")

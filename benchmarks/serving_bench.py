@@ -35,6 +35,14 @@ payloads + f16 group scales must stay <= 0.55x int8's bytes — asserted).
 Greedy argmax stability vs fp32 is asserted at prefill-logit level: the
 int4 perturbation is bounded and the top token is unmoved wherever fp32's
 top-1/top-2 margin clears twice that perturbation.
+
+Tensor-parallel serving: a ``sharded`` section serves one greedy workload
+through a tp=1 and a tp=2 paged engine (shard_map over a ("data","model")
+mesh; CI forces a 4-device host platform), asserts the streams are
+bit-identical, and reports the gated ``kv_bytes_ratio_tp2_tp1`` (per-shard
+KV bytes/request vs tp=1; must stay <= 0.55x — each shard holds only its
+kv-head slice of every block). Skipped with a marker on single-device
+runs.
 """
 from __future__ import annotations
 
@@ -308,6 +316,67 @@ def run_kv_precision(cfg, params, fast: bool) -> Tuple[List[str],
     return lines, results
 
 
+#: per-shard KV acceptance for tp=2: exact head-split halves the payload
+#: (0.5x), with headroom for rounding in the scale rows
+TP_KV_RATIO_MAX = 0.55
+
+
+def run_sharded(cfg, params, fast: bool) -> Tuple[List[str],
+                                                  Dict[str, Any]]:
+    """Tensor-parallel serving gate: tp=1 vs tp=2 paged engines on one
+    deterministic greedy workload (forced-host-device mesh in CI).
+
+    Asserts the greedy token streams are bit-identical (the "exact"
+    combine's contract) and that each tp=2 shard holds <=
+    ``TP_KV_RATIO_MAX`` of the tp=1 per-request KV footprint; emits the
+    gated ``kv_bytes_ratio_tp2_tp1`` (lower is better). Skips (non-numeric
+    marker, dropped by compare_bench's flatten) when the process sees
+    fewer than 2 devices."""
+    from repro.launch.mesh import HOST_DEVICES_FLAG
+
+    if jax.device_count() < 2:
+        why = (f"needs >=2 devices, have {jax.device_count()} "
+               f"(run under {HOST_DEVICES_FLAG}=4)")
+        return [f"serving_sharded_skipped,1,{why}"], {"skipped": why}
+    prompts = shared_prefix_prompts(cfg, 6 if fast else 10, 16, seed=31)
+    max_new = 8
+
+    def serve(tp):
+        eng = ContinuousBatchingEngine(
+            params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN, backend=BACKEND,
+            paged=True, block_size=BLOCK_SIZE, tp=tp)
+        eng.warmup(prompt_len=17)
+        reqs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        streams = [tuple(r.out_tokens or []) for r in reqs]
+        return streams, eng.metrics(reqs)
+
+    s1, m1 = serve(1)
+    s2, m2 = serve(2)
+    assert s1 == s2, "tp=2 greedy streams diverged from tp=1"
+    ratio = (m2["kv_hbm_bytes_per_req_per_shard"]
+             / m1["kv_hbm_bytes_per_req"])
+    assert ratio <= TP_KV_RATIO_MAX, (
+        f"per-shard KV {ratio:.3f}x exceeds {TP_KV_RATIO_MAX}x tp=1")
+    keys = ("completed", "decode_steps", "kv_blocks_peak",
+            "kv_hbm_bytes_per_req", "kv_hbm_bytes_per_req_per_shard")
+    results = {
+        "tp": 2,
+        "combine": "exact",
+        "greedy_bit_identical": 1,
+        "tp1": {k: m1[k] for k in keys},
+        "tp2": {k: m2[k] for k in keys},
+        "kv_bytes_ratio_tp2_tp1": ratio,
+    }
+    lines = [
+        f"serving_sharded_kv_bytes_per_shard,"
+        f"{m2['kv_hbm_bytes_per_req_per_shard']:.0f},"
+        f"ratio_vs_tp1={ratio:.3f} bit_identical=1",
+    ]
+    return lines, results
+
+
 def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     cfg = C.smoke_config(ARCH).with_overrides(dtype="float32")
     params = init_params(jax.random.PRNGKey(INIT_SEED), cfg)
@@ -341,6 +410,8 @@ def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     lines.extend(spec_lines)
     kv_lines, kv_results = run_kv_precision(cfg, params, fast)
     lines.extend(kv_lines)
+    tp_lines, tp_results = run_sharded(cfg, params, fast)
+    lines.extend(tp_lines)
     payload = {
         "arch": ARCH,
         "backend": BACKEND,
@@ -360,5 +431,6 @@ def run(fast: bool = False) -> Tuple[List[str], Dict[str, Any]]:
             "block_size": BLOCK_SIZE,
             **kv_results,
         },
+        "sharded": tp_results,
     }
     return lines, payload

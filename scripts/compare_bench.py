@@ -22,6 +22,9 @@ metric regresses by more than ``--threshold`` (default 20%):
                                                  KV-stream byte ratio)
     kv_bytes_ratio_int4_int8    higher is worse  (serving, int4 tier bytes
                                                  per request vs int8)
+    kv_bytes_ratio_tp2_tp1      higher is worse  (serving, tensor-parallel:
+                                                 per-shard KV bytes/request
+                                                 at tp=2 vs the tp=1 value)
 
 All other shared metrics are printed as informational deltas. Deliberately
 dependency-free and repo-import-free so CI can run it against a downloaded
@@ -41,7 +44,8 @@ GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower",
          "rollout_convergence_s": "lower", "fleet_p99_latency_ms": "lower",
          "prefill_tok_s": "higher", "flash_speedup": "higher",
          "int8_speedup": "higher", "int4_speedup": "higher",
-         "kv_bytes_ratio_int4_int8": "lower"}
+         "kv_bytes_ratio_int4_int8": "lower",
+         "kv_bytes_ratio_tp2_tp1": "lower"}
 
 
 def flatten(node, prefix: str = "") -> Dict[str, float]:

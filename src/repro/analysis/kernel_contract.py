@@ -12,6 +12,11 @@ KC001/KC002   every ``Backend`` subclass implements every abstract method,
 KC003/KC004   every ref-dispatching method resolves to a function that
               exists in the sibling ``kernels/ref.py`` with a matching
               positional signature.
+KC007         every *delegating* method (``return self.<inner>.<name>(...)``
+              — the tensor-parallel twins wrap an inner backend instead of
+              dispatching to a kernels module) must target the same-named
+              primitive and forward every declared positional, in order;
+              the inner backend's own KC003-6 legs then cover semantics.
 KC005/KC006   every Pallas-dispatching method resolves to a kernel module
               function with matching positional arity and an
               ``interpret`` keyword (CPU debuggability is part of the
@@ -113,6 +118,27 @@ def _dispatch_target(ctx: FileContext, fn: ast.FunctionDef
     return None
 
 
+def _delegation_target(fn: ast.FunctionDef
+                       ) -> Optional[Tuple[str, str, List[Optional[str]]]]:
+    """(inner attribute, method name, forwarded positional arg names) of a
+    ``return self.<inner>.<name>(...)`` delegation — the shape the
+    tensor-parallel backend twins use in place of a kernels dispatch.
+    Non-Name args forward as None (they can never match a param name)."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Return) \
+                or not isinstance(node.value, ast.Call):
+            continue
+        f = node.value.func
+        if isinstance(f, ast.Attribute) \
+                and isinstance(f.value, ast.Attribute) \
+                and isinstance(f.value.value, ast.Name) \
+                and f.value.value.id == "self":
+            args = [a.id if isinstance(a, ast.Name) else None
+                    for a in node.value.args]
+            return f.value.attr, f.attr, args
+    return None
+
+
 def _module_functions(path: str) -> Optional[Dict[str, ast.FunctionDef]]:
     try:
         with open(path, encoding="utf-8") as f:
@@ -169,6 +195,10 @@ def kc0_backend_dispatch(ctxs: List[FileContext]) -> Iterator[Finding]:
                     continue
                 target = _dispatch_target(ctx, impl)
                 if target is None:
+                    deleg = _delegation_target(impl)
+                    if deleg is not None:
+                        yield from _check_delegation(ctx, impl, cls.name,
+                                                     name, deleg, want)
                     continue
                 mod, fname, n_forwarded = target
                 if n_forwarded != len(want):
@@ -186,6 +216,28 @@ def kc0_backend_dispatch(ctxs: List[FileContext]) -> Iterator[Finding]:
                                                   os.path.join(
                                                       kernels_dir,
                                                       f"{mod}.py"), mod)
+
+
+def _check_delegation(ctx, impl, cls_name, method, deleg, want
+                      ) -> Iterator[Finding]:
+    """A delegating backend is contract-clean iff it forwards the SAME
+    primitive with ALL declared positionals in order — then the inner
+    backend's dispatch legs (KC003-6) carry the semantics checks."""
+    inner, fname, fwd = deleg
+    if fname != method:
+        yield ctx.finding(
+            "KC007", SLUG, impl,
+            f"{cls_name}.{method} delegates to self.{inner}.{fname}() — a "
+            f"delegating backend must forward to the same-named primitive "
+            f"so the inner backend's ref oracle still covers it")
+        return
+    if fwd != want:
+        got = ", ".join(a or "<expr>" for a in fwd)
+        yield ctx.finding(
+            "KC007", SLUG, impl,
+            f"{cls_name}.{method} forwards ({got}) to self.{inner}.{fname} "
+            f"but declares ({', '.join(want)}) — delegation must pass every "
+            f"declared positional through, in order")
 
 
 def _check_ref_oracle(ctx, impl, cls_name, method, fname, want, ref_fns
@@ -443,6 +495,17 @@ def contract_coverage(ctxs: List[FileContext]) -> Dict[str, Dict[str, object]]:
             for name, impl in _class_methods(cls).items():
                 target = _dispatch_target(ctx, impl)
                 if target is None:
+                    deleg = _delegation_target(impl)
+                    if deleg is not None and deleg[1] == name:
+                        family = METHOD_FAMILY.get(name, "other")
+                        entry = table.setdefault(family, {
+                            "backend_methods": [], "ref_oracles": [],
+                            "kernel_modules": [],
+                            "parity_test": PARITY_TESTS.get(
+                                family, ("", ()))[0]})
+                        dl = entry.setdefault("delegating_backends", [])
+                        if cls.name not in dl:
+                            dl.append(cls.name)
                     continue
                 mod, fname, _ = target
                 family = METHOD_FAMILY.get(name, "other")

@@ -4,11 +4,13 @@ A ``Backend`` implements the compute primitives the model layers dispatch
 to (``qmatmul_static`` / ``qmatmul_dynamic`` / ``quantize_weights`` /
 ``qdecode``, the paged decode trio, and the fused flash-prefill trio —
 fp / int8 / int4 precision tiers for the latter two).
-Three backends ship built-in:
+Five backends ship built-in:
 
     ref              pure-jnp oracles (fast under XLA on CPU)
     pallas-interpret Pallas kernels in interpret mode (CPU-debuggable)
     pallas-tpu       Pallas kernels compiled natively (TPU)
+    ref-tp           tensor-parallel twin of ref (host-device test mesh)
+    pallas-tpu-tp    tensor-parallel twin of pallas-tpu (chip mesh)
 
 Backend choice is scoped, not global: ``use_backend("ref")`` binds a backend
 for the duration of a trace, and ``InferenceSession(..., backend=...)`` binds
@@ -197,6 +199,65 @@ class PallasBackend(Backend):
                                              interpret=self.interpret)
 
 
+class TPBackend(Backend):
+    """Tensor-parallel twin of an inner backend (mesh-aware serving).
+
+    The compute primitives delegate 1:1 to the inner backend: under TP the
+    engine wraps the model entry points in shard_map
+    (``repro.serving.sharded.TPContext``), so by the time a primitive runs
+    it already sees this shard's kv-head slice of q / pools / scales — the
+    per-shard math IS the single-device math, and the cross-shard combine
+    lives at the model's wo sites (``layers.row_combine``), not here.
+
+    Pinning a ``*-tp`` backend is the transparent opt-in:
+    ``ContinuousBatchingEngine`` (and the fleet ``EnginePool``) shard the
+    engine with ``default_tp`` shards unless an explicit ``tp=N`` /
+    ``EngineConfig(tp=N)`` overrides it.
+    """
+
+    def __init__(self, name: str, inner: str, default_tp: int = 2):
+        self.name = name
+        self.inner_name = inner
+        self.default_tp = default_tp
+
+    @property
+    def inner(self) -> "Backend":
+        return get_backend(self.inner_name)
+
+    def qmatmul_static(self, x, w_int8, w_scale, act_scale):
+        return self.inner.qmatmul_static(x, w_int8, w_scale, act_scale)
+
+    def qmatmul_dynamic(self, x, w_int8, w_scale):
+        return self.inner.qmatmul_dynamic(x, w_int8, w_scale)
+
+    def quantize_weights(self, w):
+        return self.inner.quantize_weights(w)
+
+    def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
+        return self.inner.qdecode(q, k_i8, k_s, v_i8, v_s, bias)
+
+    def paged_decode(self, q, k_pool, v_pool, tables, pos):
+        return self.inner.paged_decode(q, k_pool, v_pool, tables, pos)
+
+    def paged_qdecode(self, q, k_pool, k_scale, v_pool, v_scale, tables, pos):
+        return self.inner.paged_qdecode(q, k_pool, k_scale, v_pool, v_scale,
+                                        tables, pos)
+
+    def paged_q4decode(self, q, k_pool, k_scale, v_pool, v_scale, tables,
+                       pos):
+        return self.inner.paged_q4decode(q, k_pool, k_scale, v_pool, v_scale,
+                                         tables, pos)
+
+    def flash_prefill(self, q, k, v):
+        return self.inner.flash_prefill(q, k, v)
+
+    def flash_qprefill(self, q, k_i8, k_s, v_i8, v_s):
+        return self.inner.flash_qprefill(q, k_i8, k_s, v_i8, v_s)
+
+    def flash_q4prefill(self, q, k_i4, k_s, v_i4, v_s):
+        return self.inner.flash_q4prefill(q, k_i4, k_s, v_i4, v_s)
+
+
 # ------------------------------------------------------------------ #
 # Registry
 # ------------------------------------------------------------------ #
@@ -226,6 +287,9 @@ def get_backend(name: Union[str, Backend]) -> Backend:
 register_backend(RefBackend())
 register_backend(PallasBackend("pallas-interpret", interpret=True))
 register_backend(PallasBackend("pallas-tpu", interpret=False))
+# tensor-parallel twins: same kernels, engine shards the model around them
+register_backend(TPBackend("ref-tp", inner="ref"))
+register_backend(TPBackend("pallas-tpu-tp", inner="pallas-tpu"))
 
 
 # ------------------------------------------------------------------ #

@@ -95,22 +95,25 @@ class EnginePool:
                        profile: Optional[DeviceProfile] = None, *,
                        kv_fraction: Optional[float] = None,
                        n_slots: int = 2, max_len: int = 128,
-                       block_size: int = 16):
+                       block_size: int = 16, tp: int = 1):
         """Paged ``ContinuousBatchingEngine`` sized for ``profile``'s KV
         budget (full pool when no profile), cached per class so the whole
-        device class shares one engine."""
+        device class shares one engine. ``tp > 1`` profiles serve one model
+        tensor-parallel across that many chips: the profile budget is read
+        as *per-chip* HBM, so the engine divides its per-block charge by
+        the shard count and admits proportionally more blocks."""
         from repro.serving.scheduler import ContinuousBatchingEngine
 
         budget = (self.kv_budget_bytes(profile, kv_fraction)
                   if profile is not None else None)
         key = (ref.key, backend, profile.name if profile else None,
-               budget, n_slots, max_len, block_size)
+               budget, n_slots, max_len, block_size, tp)
         eng = self._engines.get(key)
         if eng is None:
             eng = ContinuousBatchingEngine(
                 self.artifact(ref), backend=backend, n_slots=n_slots,
                 max_len=max_len, paged=True, block_size=block_size,
-                kv_budget_bytes=budget)
+                kv_budget_bytes=budget, tp=tp)
             self._engines[key] = eng
         return eng
 
@@ -119,16 +122,22 @@ class EnginePool:
         blocks touched — the fleet-side view of cache memory pressure."""
         out: Dict[str, Dict[str, Any]] = {}
         for (akey, backend, pname, budget, n_slots, max_len,
-             block_size), eng in self._engines.items():
+             block_size, tp), eng in self._engines.items():
             kv = eng.kv
             # key mirrors the full cache key: engines differing only in
             # budget/geometry must not overwrite each other in the report
             out[f"{akey}@{backend or 'default'}/{pname or 'unbounded'}"
-                f"/{budget or 'full'}b/{n_slots}x{max_len}/bs{block_size}"] = {
+                f"/{budget or 'full'}b/{n_slots}x{max_len}/bs{block_size}"
+                f"/tp{tp}"] = {
                 "budget_bytes": budget,
+                "tp": tp,
                 "n_blocks": kv.alloc.usable_blocks,
                 "bytes_per_block": kv.bytes_per_block,
+                # per-chip view: what each shard actually resides in HBM
+                "bytes_per_block_per_shard": kv.bytes_per_block_per_shard,
                 "kv_capacity_bytes": kv.bytes_per_block
+                * kv.alloc.usable_blocks,
+                "kv_capacity_bytes_per_shard": kv.bytes_per_block_per_shard
                 * kv.alloc.usable_blocks,
                 "kv_blocks_peak": kv.alloc.stats.peak_in_use,
                 "kv_peak_bytes": kv.kv_bytes_in_use(

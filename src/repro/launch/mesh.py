@@ -6,23 +6,72 @@ device state (the dry-run sets XLA_FLAGS before any jax import).
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types on make_mesh
+    from jax.sharding import AxisType
+except ImportError:  # 0.4.x pin of the CI matrix
+    AxisType = None
+
+#: the canonical hint for forcing a multi-device host platform in tests/CI
+HOST_DEVICES_FLAG = "XLA_FLAGS=--xla_force_host_platform_device_count"
+
+
+def _check_devices(needed: int, who: str) -> None:
+    have = jax.device_count()
+    if have < needed:
+        raise RuntimeError(
+            f"{who} needs {needed} devices but only {have} "
+            f"{'is' if have == 1 else 'are'} visible. Set "
+            f"{HOST_DEVICES_FLAG}={needed} in the environment BEFORE jax "
+            "initializes (a fresh process), or run on real accelerators; "
+            "tests should skip via launch.mesh.require_devices instead.")
+
+
+def require_devices(n: int) -> None:
+    """pytest-skip the calling test when fewer than ``n`` devices exist."""
+    import pytest
+
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices; run under {HOST_DEVICES_FLAG}={n}")
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    devs = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    _check_devices(int(np.prod(shape)), "make_production_mesh")
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0) -> Mesh:
     """Small mesh for CI tests (requires xla_force_host_platform_device_count)."""
-    if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    _check_devices(int(np.prod(shape)), "make_test_mesh")
+    return _make_mesh(shape, axes)
+
+
+def make_tp_mesh(tp: int) -> Mesh:
+    """Serving tensor-parallel mesh: ("data", "model") with data=1.
+
+    Plain ``Mesh`` (no axis types): serving TP drives explicit shard_map
+    collectives, never GSPMD auto-sharding, and must build on the 0.4.x
+    CI pin too.
+    """
+    _check_devices(tp, f"make_tp_mesh(tp={tp})")
+    devs = np.array(jax.devices()[:tp]).reshape(1, tp)
+    return Mesh(devs, ("data", "model"))
 
 
 # Hardware constants for the roofline report (TPU v5e)

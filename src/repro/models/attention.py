@@ -37,7 +37,8 @@ from repro.kernels.ref import paged_gather, paged_valid, q4decode_ref
 # kernels.quantize — pure jnp, safe to import eagerly
 from repro.kernels.quantize import dequantize_kv_int4, quantize_kv_int4
 from repro.models.config import ModelConfig
-from repro.models.layers import apply_rope, dense_init, linear, rms_norm
+from repro.models.layers import (apply_rope, dense_init, linear, rms_norm,
+                                 row_combine)
 
 NEG_INF = -2.0e38
 Q_CHUNK = 512
@@ -227,7 +228,7 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
             kq, ks = _quantize_kv(k)
             vq, vs = _quantize_kv(v)
             out = ops.flash_qprefill(q, kq, ks, vq, vs).astype(x.dtype)
-        out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+        out = row_combine(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
         return out, (_ring_or_pad(kq, s, window, pad_to),
                      _ring_or_pad(ks, s, window, pad_to),
                      _ring_or_pad(vq, s, window, pad_to),
@@ -239,7 +240,7 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
     else:
         out = chunked_attention(q, k, v, positions, window=window,
                                 native_accum=cfg.opt_attn_accum)
-    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+    out = row_combine(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
     kc = _ring_or_pad(k, s, window, pad_to)
     vc = _ring_or_pad(v, s, window, pad_to)
     if prec == "int4":
@@ -320,7 +321,7 @@ def gqa_prefill_paged(p, x, positions, cache, pos, tables, cfg: ModelConfig):
         k_pool = k_pool.at[blk, off].set(k.astype(k_pool.dtype))
         v_pool = v_pool.at[blk, off].set(v.astype(v_pool.dtype))
         new_cache = (k_pool, v_pool)
-    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+    out = row_combine(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
     return out, new_cache
 
 
@@ -393,20 +394,20 @@ def gqa_decode(p, x, cache_kv, pos, cfg: ModelConfig, window: int = 0):
         bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
         out = q4decode_ref(qg, k_cache, k_scale, v_cache, v_scale, bias)
         out = out.astype(x.dtype).reshape(b, 1, hq * hd)
-        return linear(p["wo"], out), (k_cache, k_scale, v_cache, v_scale)
+        return row_combine(p["wo"], out), (k_cache, k_scale, v_cache, v_scale)
     if prec == "int8":
         from repro.kernels import ops  # fused-dequant decode attention
 
         bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
         out = ops.qdecode(qg, k_cache, k_scale, v_cache, v_scale, bias)
         out = out.astype(x.dtype).reshape(b, 1, hq * hd)
-        return linear(p["wo"], out), (k_cache, k_scale, v_cache, v_scale)
+        return row_combine(p["wo"], out), (k_cache, k_scale, v_cache, v_scale)
     scores = _score_einsum("bkgh,btkh->bkgt", qg, k_cache, cfg.opt_attn_accum)
     scores = scores / jnp.sqrt(hd).astype(jnp.float32)
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgt,btkh->bkgh", probs, v_cache).reshape(b, 1, hq * hd)
-    return linear(p["wo"], out), (k_cache, v_cache)
+    return row_combine(p["wo"], out), (k_cache, v_cache)
 
 
 # ----------------------------------------------------------------------- #
@@ -476,7 +477,7 @@ def gqa_verify(p, x, cache_kv, pos, cfg: ModelConfig):
     probs = jax.nn.softmax(scores, axis=-1).astype(vf.dtype)
     out = jnp.einsum("bkgmt,btkh->bmkgh", probs, vf)
     out = out.astype(x.dtype).reshape(b, m, hq * hd)
-    return linear(p["wo"], out), new_cache
+    return row_combine(p["wo"], out), new_cache
 
 
 def paged_verify_slots(tables, positions, block_size: int):
@@ -549,7 +550,7 @@ def gqa_verify_paged(p, x, cache, pos, tables, cfg: ModelConfig):
     probs = jax.nn.softmax(scores, axis=-1).astype(vf.dtype)
     out = jnp.einsum("bkgmt,btkh->bmkgh", probs, vf)
     out = out.astype(x.dtype).reshape(b, m, hq * hd)
-    return linear(p["wo"], out), new_cache
+    return row_combine(p["wo"], out), new_cache
 
 
 def _mla_attend_verify(p, x, c_kv, k_rope, positions, k_pos, valid,
@@ -581,7 +582,7 @@ def mla_verify(p, x, cache, pos, cfg: ModelConfig):
     k_pos = jnp.broadcast_to(jnp.arange(s_cache)[None], (b, s_cache))
     valid = k_pos[:, None, :] <= positions[:, :, None]
     out = _mla_attend_verify(p, x, c_kv, k_rope, positions, k_pos, valid, cfg)
-    return linear(p["wo"], out), (c_kv, k_rope)
+    return row_combine(p["wo"], out), (c_kv, k_rope)
 
 
 def mla_verify_paged(p, x, cache, pos, tables, cfg: ModelConfig):
@@ -604,7 +605,7 @@ def mla_verify_paged(p, x, cache, pos, tables, cfg: ModelConfig):
     valid = ((k_pos[:, None, :] <= positions[:, :, None])
              & allocated[:, None, :])
     out = _mla_attend_verify(p, x, c_kv, k_rope, positions, k_pos, valid, cfg)
-    return linear(p["wo"], out), (c_pool, r_pool)
+    return row_combine(p["wo"], out), (c_pool, r_pool)
 
 
 # ----------------------------------------------------------------------- #
@@ -674,7 +675,7 @@ def gqa_decode_paged(p, x, cache, pos, tables, cfg: ModelConfig):
         out = ops.paged_decode(qg, k_pool, v_pool, tables, pos_vec)
         new_cache = (k_pool, v_pool)
     out = out.astype(x.dtype).reshape(b, 1, hq * hd)
-    return linear(p["wo"], out), new_cache
+    return row_combine(p["wo"], out), new_cache
 
 
 # ----------------------------------------------------------------------- #
@@ -714,7 +715,7 @@ def mla_prefill(p, x, positions, cfg: ModelConfig, window: int = 0,
     else:
         out = chunked_attention(q, k, v, positions, window=window,
                                 native_accum=cfg.opt_attn_accum)
-    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.v_head_dim))
+    out = row_combine(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.v_head_dim))
     return out, (_ring_or_pad(c_kv, s, window, pad_to),
                  _ring_or_pad(k_rope, s, window, pad_to))
 
@@ -738,7 +739,7 @@ def mla_prefill_paged(p, x, positions, cache, pos, tables, cfg: ModelConfig):
     blk, off = _paged_prefill_slots(tables, n_valid, s, c_pool.shape[1])
     c_pool = c_pool.at[blk, off].set(c_kv.astype(c_pool.dtype))
     r_pool = r_pool.at[blk, off].set(k_rope.astype(r_pool.dtype))
-    out = linear(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.v_head_dim))
+    out = row_combine(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.v_head_dim))
     return out, (c_pool, r_pool)
 
 
@@ -804,7 +805,7 @@ def mla_decode_absorbed(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
     k_rope = _batched_update(k_rope, linear(p["w_kr"], x), slot_vec)
     out = _mla_attend_absorbed(p, x, c_kv, k_rope, pos_vec[:, None], k_pos,
                                valid, cfg)
-    return linear(p["wo"], out), (c_kv, k_rope)
+    return row_combine(p["wo"], out), (c_kv, k_rope)
 
 
 def _mla_attend_naive(p, x, c_kv, k_rope, pos_b, k_pos, valid,
@@ -838,7 +839,7 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig, window: int = 0):
     k_rope = _batched_update(k_rope, linear(p["w_kr"], x), slot_vec)
     out = _mla_attend_naive(p, x, c_kv, k_rope, pos_vec[:, None], k_pos,
                             valid, cfg)
-    return linear(p["wo"], out), (c_kv, k_rope)
+    return row_combine(p["wo"], out), (c_kv, k_rope)
 
 
 def mla_decode_paged(p, x, cache, pos, tables, cfg: ModelConfig):
@@ -865,4 +866,4 @@ def mla_decode_paged(p, x, cache, pos, tables, cfg: ModelConfig):
     attend = (_mla_attend_absorbed if cfg.opt_mla_absorb
               else _mla_attend_naive)
     out = attend(p, x, c_kv, k_rope, pos_vec[:, None], k_pos, valid, cfg)
-    return linear(p["wo"], out), (c_pool, r_pool)
+    return row_combine(p["wo"], out), (c_pool, r_pool)

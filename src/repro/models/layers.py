@@ -56,11 +56,42 @@ def rms_norm(w: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
     return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
 
 
+def row_combine(p, x: jax.Array) -> jax.Array:
+    """Output-side (``wo``) linear, tensor-parallel aware.
+
+    Outside a TP region this IS ``linear``. Inside a shard_map body
+    (``sharding.tp_region``) ``x`` holds this shard's head/ff slice and the
+    combine mode picks the collective:
+
+      exact  all_gather the slices along the feature axis (tiled, shard
+             order == natural chunk order) and apply the full replicated
+             weight — same contraction as tp=1, greedy streams bit-match.
+      psum   row-parallel: local rows of ``wo`` produce a partial [., d]
+             sum, one psum over the model axis completes it (one [., d]
+             combine instead of an [., X] gather — the production path).
+    """
+    from repro.models.sharding import tp_state
+
+    st = tp_state()
+    if st is None or st.tp <= 1:
+        return linear(p, x)
+    if st.combine == "exact":
+        x = jax.lax.all_gather(x, st.axis, axis=x.ndim - 1, tiled=True)
+        return linear(p, x)
+    return jax.lax.psum(linear(p, x), st.axis)
+
+
 def swiglu(wi, wo, x: jax.Array) -> jax.Array:
-    """Fused gate+up projection: wi [d, 2*ff], wo [ff, d]."""
+    """Fused gate+up projection: wi [d, 2*ff], wo [ff, d].
+
+    Under serving TP, ``wi`` is column-sharded with its gate|up columns
+    pre-permuted per shard (``serving.sharded.permute_wi_for_tp``) so the
+    local split below stays a gate/up split; the ``wo`` reduction combines
+    across shards via ``row_combine``.
+    """
     gu = linear(wi, x)
     g, u = jnp.split(gu, 2, axis=-1)
-    return linear(wo, jax.nn.silu(g) * u)
+    return row_combine(wo, jax.nn.silu(g) * u)
 
 
 # ----------------------------------------------------------------------- #

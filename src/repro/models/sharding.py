@@ -11,8 +11,11 @@ mesh and the 512-chip production mesh.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import dataclasses
 import re
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
@@ -137,6 +140,110 @@ def cache_specs(mesh: Mesh, cache_shapes):
 def _ambient_mesh() -> Mesh:
     m = jax.sharding.get_abstract_mesh()
     return m
+
+
+# --------------------------------------------------------------------- #
+# Tensor-parallel trace state (serving TP via shard_map)
+# --------------------------------------------------------------------- #
+# ``serving.sharded`` wraps the model entry points in shard_map and traces
+# the body under ``tp_region``: inside, the model runs on a *local* cfg
+# (heads / d_ff divided by tp) and the wo-site combine in ``layers`` reads
+# this state to emit the cross-shard collective. Outside a region the state
+# is None and every combine degrades to a plain ``linear`` — single-device
+# callers never pay for TP.
+
+@dataclasses.dataclass(frozen=True)
+class TPState:
+    tp: int                 # shard count over the "model" mesh axis
+    combine: str            # "exact" (all_gather) | "psum" (row-parallel)
+    axis: str = "model"     # mesh axis name the collectives run over
+
+
+_TP_STATE: contextvars.ContextVar[Optional[TPState]] = contextvars.ContextVar(
+    "repro_tp_state", default=None)
+
+
+def tp_state() -> Optional[TPState]:
+    """The active ``TPState`` (inside a shard_map body trace) or None."""
+    return _TP_STATE.get()
+
+
+@contextlib.contextmanager
+def tp_region(tp: int, combine: str = "exact", axis: str = "model"):
+    """Scope marking a shard_map body trace as tensor-parallel."""
+    if combine not in ("exact", "psum"):
+        raise ValueError(f"unknown TP combine mode {combine!r} "
+                         "(expected 'exact' or 'psum')")
+    token = _TP_STATE.set(TPState(tp, combine, axis))
+    try:
+        yield
+    finally:
+        _TP_STATE.reset(token)
+
+
+# --------------------------------------------------------------------- #
+# Tensor-parallel param / cache specs (shard_map in_specs)
+# --------------------------------------------------------------------- #
+#: attention / MLP input-side projections: column-parallel (last dim is a
+#: head-or-ff concat, contiguous chunks = per-shard head groups). ``wi`` is
+#: only safe because the engine pre-permutes its fused gate|up columns
+#: (``serving.sharded.permute_wi_for_tp``) so each shard's local split
+#: yields [gate_s | up_s].
+_TP_COL_RE = re.compile(r"(wq|wk|wv|w_uq|w_ukv|wi)$")
+#: output-side projections: row-parallel in "psum" mode, replicated in
+#: "exact" mode (the gathered activations need the full weight).
+_TP_ROW_RE = re.compile(r"(wo)$")
+
+
+def tp_param_spec(path: str, shape, mesh: Mesh, combine: str = "exact") -> P:
+    """shard_map in_spec for one param leaf under serving TP.
+
+    Unlike ``_param_rule`` (GSPMD hints for training) these are *manual*
+    shard_map specs: only head/ff-parallel dims shard; everything else —
+    embeddings, norms, MLA down-projections, the residual stream — stays
+    replicated so per-shard model code sees full-width activations.
+    """
+    nd = len(shape)
+    if _TP_COL_RE.search(path) and "moe" not in path:
+        return checked_spec(shape, mesh, *([None] * (nd - 1)), "model")
+    if _TP_ROW_RE.search(path) and "moe" not in path:
+        if combine == "exact":
+            return P(*([None] * nd))
+        return checked_spec(shape, mesh, *([None] * (nd - 2)), "model", None)
+    return P(*([None] * nd))
+
+
+def tp_param_specs(params, mesh: Mesh, combine: str = "exact"):
+    """Pytree of shard_map in_specs matching ``params``' structure."""
+
+    def rule(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return tp_param_spec(pstr, leaf.shape, mesh, combine)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def tp_cache_spec(cfg: ModelConfig, shape, mesh: Mesh) -> P:
+    """shard_map spec for one KV-cache / paged-pool leaf under serving TP.
+
+    GQA leaves — dense ``[L, B, cl, Hkv, ...]`` and paged ``[L, N, bs,
+    Hkv, ...]`` payloads plus their int8/int4 scale rows — all carry the
+    kv-head axis at dim 3: shard it. MLA caches (``c_kv``/``k_rope``) are
+    head-free latent projections shared by every head shard: replicate.
+    """
+    nd = len(shape)
+    if (cfg.attention != "mla" and nd >= 4
+            and shape[3] == cfg.n_kv_heads):
+        return checked_spec(shape, mesh, None, None, None, "model",
+                            *([None] * (nd - 4)))
+    return P(*([None] * nd))
+
+
+def tp_cache_specs(cfg: ModelConfig, caches, mesh: Mesh):
+    """Pytree of shard_map specs matching a cache / pool tree."""
+    return jax.tree.map(lambda leaf: tp_cache_spec(cfg, leaf.shape, mesh),
+                        caches)
 
 
 def constrain(x: jax.Array, *entries) -> jax.Array:

@@ -345,23 +345,43 @@ class PagedKVCache:
     decode loop never syncs device -> host."""
 
     def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
-                 block_size: int, max_blocks_per_seq: int):
+                 block_size: int, max_blocks_per_seq: int, *,
+                 shards: int = 1, pool_sharding=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.block_size = block_size
         self.max_blocks = max_blocks_per_seq
+        # tensor-parallel serving: each of ``shards`` devices holds its
+        # kv-head slice of every pool leaf. Block tables, the allocator,
+        # and slot bookkeeping stay host-side and replicated — sharding
+        # never changes block identity, only where a block's payload lives.
+        self.shards = max(int(shards), 1)
+        self._pool_sharding = pool_sharding
         self.alloc = BlockAllocator(n_blocks, block_size)
-        self.pools = init_paged_pools(cfg, n_blocks, block_size)
+        self.pools = self._place(init_paged_pools(cfg, n_blocks, block_size))
         self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
         self._tables: Optional[jax.Array] = None
         if self.bytes_per_block * self.alloc.usable_blocks <= 0:
             raise ValueError("empty paged pool")
 
+    def _place(self, pools):
+        if self._pool_sharding is None:
+            return pools
+        return self._pool_sharding(pools)
+
     # ------------------------------------------------------------- #
     @property
     def bytes_per_block(self) -> int:
+        """Global pool bytes per block (``leaf.nbytes`` on a sharded array
+        reports global bytes — summed over every shard's slice)."""
         n = self.alloc.n_blocks
         return sum(leaf.nbytes // n for leaf in jax.tree.leaves(self.pools))
+
+    @property
+    def bytes_per_block_per_shard(self) -> int:
+        """HBM bytes one shard's device pays per block (== global for
+        tp=1 and for replicated MLA pools)."""
+        return self.bytes_per_block // kv_shard_divisor(self.cfg, self.shards)
 
     @property
     def bytes_per_token(self) -> int:
@@ -370,6 +390,10 @@ class PagedKVCache:
     def kv_bytes_in_use(self, blocks: Optional[int] = None) -> int:
         n = self.alloc.in_use if blocks is None else blocks
         return n * self.bytes_per_block
+
+    def kv_bytes_in_use_per_shard(self, blocks: Optional[int] = None) -> int:
+        n = self.alloc.in_use if blocks is None else blocks
+        return n * self.bytes_per_block_per_shard
 
     @property
     def tables(self) -> jax.Array:
@@ -481,7 +505,18 @@ class PagedKVCache:
 # ------------------------------------------------------------------ #
 # Sizing helpers (fleet memory accounting)
 # ------------------------------------------------------------------ #
-def kv_bytes_per_token(cfg: ModelConfig) -> int:
+def kv_shard_divisor(cfg: ModelConfig, shards: int = 1) -> int:
+    """How many ways the cache payload actually splits under ``shards``-way
+    tensor parallelism: GQA caches shard on the kv-head axis, MLA latent
+    caches are head-free and replicate on every shard (divisor 1)."""
+    if shards <= 1 or cfg.attention == "mla":
+        return 1
+    if cfg.n_kv_heads % shards:
+        return 1
+    return shards
+
+
+def kv_bytes_per_token(cfg: ModelConfig, shards: int = 1) -> int:
     """Per-token, per-layer KV bytes for ``cfg``'s resolved precision tier —
     the single accounting rule shared by ``kv_bytes_per_block`` (admission
     budgeting, fleet ``kv_budget_bytes``) and the benchmarks'
@@ -491,31 +526,44 @@ def kv_bytes_per_token(cfg: ModelConfig) -> int:
         fp     2 * Hkv * hd * itemsize
         int8   2 * Hkv * (hd + 4)                 payload + per-head f32 scale
         int4   2 * Hkv * (hd/2 + 2 * n_groups)    nibbles + f16 group scales
+
+    ``shards`` > 1 returns the *per-shard* bytes under tensor-parallel
+    serving: GQA tiers carry ``Hkv / shards`` local heads (payload AND
+    scale rows both ride the head axis, so every tier divides exactly);
+    MLA caches replicate and keep their full size per shard.
     """
     hd = cfg.resolved_head_dim
     if cfg.attention == "mla":
         return int((cfg.kv_lora_rank + cfg.qk_rope_dim)
                    * jnp.dtype(cfg.activation_dtype).itemsize)
+    hkv = cfg.n_kv_heads // kv_shard_divisor(cfg, shards)
     prec = cfg.kv_precision
     if prec == "int4":
         from repro.kernels.quantize import kv_group_size
 
         n_groups = hd // kv_group_size(hd)
-        return int(2 * cfg.n_kv_heads * (hd // 2 + 2 * n_groups))
+        return int(2 * hkv * (hd // 2 + 2 * n_groups))
     if prec == "int8":
-        return int(2 * cfg.n_kv_heads * (hd + 4))
-    return int(2 * cfg.n_kv_heads * hd
+        return int(2 * hkv * (hd + 4))
+    return int(2 * hkv * hd
                * jnp.dtype(cfg.activation_dtype).itemsize)
 
 
-def kv_bytes_per_block(cfg: ModelConfig, block_size: int) -> int:
+def kv_bytes_per_block(cfg: ModelConfig, block_size: int,
+                       shards: int = 1) -> int:
     """Per-block HBM bytes across all layers — the unit of the fleet's
-    per-device KV budget (``EnginePool.kv_budget_bytes``)."""
-    return int(cfg.n_layers * block_size * kv_bytes_per_token(cfg))
+    per-device KV budget (``EnginePool.kv_budget_bytes``). With
+    ``shards`` > 1: bytes each shard's device pays per pool block."""
+    return int(cfg.n_layers * block_size * kv_bytes_per_token(cfg, shards))
 
 
 def blocks_for_budget(cfg: ModelConfig, block_size: int,
-                      budget_bytes: int, floor: int = 2) -> int:
-    """How many pool blocks fit a byte budget (>= ``floor`` usable)."""
-    per = kv_bytes_per_block(cfg, block_size)
+                      budget_bytes: int, floor: int = 2,
+                      shards: int = 1) -> int:
+    """How many pool blocks fit a byte budget (>= ``floor`` usable).
+
+    ``budget_bytes`` is per *device*; under tensor parallelism each device
+    holds only its head shard of every block, so the same budget admits up
+    to ``shards``x more blocks (MLA pools replicate — no gain)."""
+    per = kv_bytes_per_block(cfg, block_size, shards)
     return max(floor + 1, budget_bytes // max(per, 1))

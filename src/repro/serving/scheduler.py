@@ -104,6 +104,9 @@ METRIC_KEYS = (
     "prompt_tokens_computed",    # prompt tokens actually recomputed
     "kv_blocks_peak",            # allocator high-water mark (paged)
     "kv_hbm_bytes_per_req",      # peak cache HBM / n_slots (dense + paged)
+    # tensor-parallel serving (== kv_hbm_bytes_per_req when tp == 1)
+    "tp",                        # model-axis shard count of this engine
+    "kv_hbm_bytes_per_req_per_shard",  # per-chip share of the KV footprint
     # speculative decoding (zero for non-spec engines)
     "spec_events",               # per-slot draft/verify acceptance rounds
     "spec_draft_tokens",         # draft tokens proposed
@@ -111,6 +114,17 @@ METRIC_KEYS = (
     "acceptance_rate",           # accepted / proposed draft tokens
     "accepted_tokens_per_step",  # committed tokens per verify round (>1 good)
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-level knobs that travel as one value (fleet profiles, bench
+    configs). ``ContinuousBatchingEngine(..., config=EngineConfig(tp=2))``
+    turns on tensor-parallel serving with no other call-site changes;
+    explicit keyword arguments win over the config's fields."""
+    tp: int = 1                    # model-axis shards (1 = unsharded)
+    tp_combine: str = "exact"      # "exact" (bit-identical) | "psum"
+    backend: Optional[str] = None  # compute backend name to pin
 
 
 @dataclasses.dataclass
@@ -200,11 +214,21 @@ class ContinuousBatchingEngine:
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  kv_budget_bytes: Optional[int] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 tp: int = 1, tp_combine: str = "exact",
+                 config: Optional["EngineConfig"] = None):
         # local import: repro.api pulls the fleet stack which imports
         # serving — resolve lazily to stay acyclic (same as engine.py)
-        from repro.api.backends import get_backend, use_backend
+        from repro.api.backends import TPBackend, get_backend, use_backend
         from repro.serving.engine import InferenceSession
+
+        if config is not None:
+            if tp == 1:
+                tp = config.tp
+            if tp_combine == "exact":
+                tp_combine = config.tp_combine
+            if backend is None:
+                backend = config.backend
 
         if isinstance(model, InferenceSession):
             params, cfg = model.params, model.cfg
@@ -220,6 +244,28 @@ class ContinuousBatchingEngine:
         self.params = params
         self.cfg = cfg
         self.backend = get_backend(backend) if backend is not None else None
+        # tensor-parallel serving: a pinned *-tp backend opts in at its
+        # default width; an explicit tp=N shards with the matching twin of
+        # whatever compute backend is pinned (no call-site changes — the
+        # shard_map wrapping happens at the bind sites below)
+        if isinstance(self.backend, TPBackend) and tp == 1:
+            tp = self.backend.default_tp
+        if tp > 1 and self.backend is not None \
+                and not isinstance(self.backend, TPBackend):
+            from repro.api.backends import available_backends
+
+            twin = f"{self.backend.name}-tp"
+            if twin in available_backends():
+                self.backend = get_backend(twin)
+        self.tp = tp
+        if tp > 1:
+            from repro.serving.sharded import TPContext
+
+            self._tp_ctx: Optional[TPContext] = TPContext(
+                cfg, tp, combine=tp_combine, params=params)
+            self.params = params = self._tp_ctx.shard_params(params)
+        else:
+            self._tp_ctx = None
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
@@ -272,19 +318,28 @@ class ContinuousBatchingEngine:
 
                     # budget-sized pool, capped at full capacity (a huge
                     # budget must not allocate pools past what n_slots *
-                    # max_len sequences could ever touch)
+                    # max_len sequences could ever touch). The budget is
+                    # per *device*: under tp each shard holds only its
+                    # kv-head slice of a block, so the same budget admits
+                    # more blocks (shards= divisor; MLA pools replicate)
                     n_blocks = min(blocks_for_budget(cfg, block_size,
-                                                     kv_budget_bytes),
+                                                     kv_budget_bytes,
+                                                     shards=self.tp),
                                    n_slots * max_blocks + 1)
                 else:
                     # full budget: every slot can hold a max-length sequence
                     n_blocks = n_slots * max_blocks + 1
             self.kv: Optional[PagedKVCache] = PagedKVCache(
-                cfg, n_slots, n_blocks, block_size, max_blocks)
+                cfg, n_slots, n_blocks, block_size, max_blocks,
+                shards=self.tp,
+                pool_sharding=(self._tp_ctx.shard_cache
+                               if self._tp_ctx is not None else None))
             self.cache = self.kv.pools          # alias: pools ARE the cache
         else:
             self.kv = None
             self.cache = init_cache(cfg, n_slots, self._pad_len)
+            if self._tp_ctx is not None:
+                self.cache = self._tp_ctx.shard_cache(self.cache)
         # jit entry points (shapes fixed by the slot pool), traced with this
         # engine's backend in scope so the kernel choice is baked in;
         # draft=True binds the draft model's backend instead
@@ -298,13 +353,25 @@ class ContinuousBatchingEngine:
 
             return call
 
-        self._decode = bind(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
-        # ``nv`` (traced int32) marks the true token count: _admit_dense
-        # bucket-pads the token axis (where bucketed_prefill_ok allows) so
-        # distinct prompt lengths share one compiled prefill per bucket
-        self._prefill = bind(
-            lambda p, b, nv: prefill(p, b, cfg, pad_to=self._pad_len,
-                                     n_valid=nv))
+        # with tp > 1 the model entry points are the shard-mapped twins
+        # (TPContext methods: same arities, cfg + mesh captured) — every
+        # call site below stays identical
+        tpx = self._tp_ctx
+        if tpx is not None:
+            self._decode = bind(lambda p, c, t, pos:
+                                tpx.decode_step(p, c, t, pos))
+            self._prefill = bind(lambda p, b, nv:
+                                 tpx.prefill(p, b, nv, pad_to=self._pad_len))
+        else:
+            self._decode = bind(
+                lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+            # ``nv`` (traced int32) marks the true token count: _admit_dense
+            # bucket-pads the token axis (where bucketed_prefill_ok allows)
+            # so distinct prompt lengths share one compiled prefill per
+            # bucket
+            self._prefill = bind(
+                lambda p, b, nv: prefill(p, b, cfg, pad_to=self._pad_len,
+                                         n_valid=nv))
         if spec is not None:
             dcfg = self.draft_cfg
             # the draft keeps a dense per-slot cache even under a paged
@@ -321,27 +388,45 @@ class ContinuousBatchingEngine:
                 lambda p, b, nv: prefill(p, b, dcfg, pad_to=self._pad_len,
                                          n_valid=nv),
                 draft=True)
-            self._verify = bind(
-                lambda p, c, t, pos: verify_step(p, c, t, pos, cfg))
+            if tpx is not None:
+                self._verify = bind(lambda p, c, t, pos:
+                                    tpx.verify_step(p, c, t, pos))
+            else:
+                self._verify = bind(
+                    lambda p, c, t, pos: verify_step(p, c, t, pos, cfg))
             if paged:
-                self._verify_paged = bind(
-                    lambda p, c, t, pos, tabs: verify_step_paged(
-                        p, c, t, pos, tabs, cfg))
+                if tpx is not None:
+                    self._verify_paged = bind(
+                        lambda p, c, t, pos, tabs: tpx.verify_step_paged(
+                            p, c, t, pos, tabs))
+                else:
+                    self._verify_paged = bind(
+                        lambda p, c, t, pos, tabs: verify_step_paged(
+                            p, c, t, pos, tabs, cfg))
         self.spec_events = 0           # per-slot verify acceptance rounds
         self.spec_committed = 0        # tokens committed by those rounds
         self.draft_proposed = 0
         self.draft_accepted = 0
         if paged:
-            self._decode_paged = bind(
-                lambda p, c, t, pos, tabs: decode_step_paged(p, c, t, pos,
-                                                             tabs, cfg))
-            # cold prefill scatters K/V straight into the block pools
-            # through the slot's table (no dense single-request cache);
-            # tokens are bucket-padded where the arch allows, so one
-            # compile per bucket instead of one per distinct prompt length
-            self._prefill_paged = bind(
-                lambda p, c, b, nv, tabs: prefill_paged(p, c, b, nv, tabs,
-                                                        cfg))
+            if tpx is not None:
+                self._decode_paged = bind(
+                    lambda p, c, t, pos, tabs: tpx.decode_step_paged(
+                        p, c, t, pos, tabs))
+                self._prefill_paged = bind(
+                    lambda p, c, b, nv, tabs: tpx.prefill_paged(
+                        p, c, b, nv, tabs))
+            else:
+                self._decode_paged = bind(
+                    lambda p, c, t, pos, tabs: decode_step_paged(
+                        p, c, t, pos, tabs, cfg))
+                # cold prefill scatters K/V straight into the block pools
+                # through the slot's table (no dense single-request cache);
+                # tokens are bucket-padded where the arch allows, so one
+                # compile per bucket instead of one per distinct prompt
+                # length
+                self._prefill_paged = bind(
+                    lambda p, c, b, nv, tabs: prefill_paged(p, c, b, nv,
+                                                            tabs, cfg))
 
     # ---------------------------------------------------------------- #
     @classmethod
@@ -987,6 +1072,7 @@ class ContinuousBatchingEngine:
                              if self.prompt_tokens_submitted else 0.0),
             kv_blocks_peak=(self.kv.alloc.stats.peak_in_use
                             if self.paged else 0),
+            tp=self.tp,
             spec_events=self.spec_events,
             spec_draft_tokens=self.draft_proposed,
             spec_accepted_tokens=self.draft_accepted,
@@ -1002,9 +1088,17 @@ class ContinuousBatchingEngine:
         # actually touched (high-water mark), shared prefixes counted once
         if self.paged:
             kv_bytes = self.kv.kv_bytes_in_use(self.kv.alloc.stats.peak_in_use)
+            shard_bytes = self.kv.kv_bytes_in_use_per_shard(
+                self.kv.alloc.stats.peak_in_use)
         else:
+            from repro.serving.kvcache import kv_shard_divisor
+
+            # .nbytes on a sharded jax.Array reports the GLOBAL footprint —
+            # divide explicitly for the per-chip share
             kv_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
+            shard_bytes = kv_bytes // kv_shard_divisor(self.cfg, self.tp)
         m["kv_hbm_bytes_per_req"] = kv_bytes / self.n_slots
+        m["kv_hbm_bytes_per_req_per_shard"] = shard_bytes / self.n_slots
         ttft = [r.first_token_at - r.submitted_at for r in done]
         total = [r.finished_at - r.submitted_at for r in done]
         toks = sum(len(r.out_tokens) for r in done)

@@ -43,3 +43,31 @@ class BrokenBackend(Backend):
         # KC005: kernels/quant.py does not exist
         from fixkc.kernels import quant as _q
         return _q.quantize_weights(w)
+
+
+class BrokenDelegatingBackend(Backend):
+    """KC007 fixture: a tensor-parallel-style wrapper that delegates to an
+    inner backend instead of dispatching to a kernels module."""
+    name = "broken-tp"
+
+    @property
+    def inner(self):
+        return Backend()
+
+    def paged_decode(self, q, pool, tables, pos):
+        # clean delegation: same primitive, every positional in order
+        return self.inner.paged_decode(q, pool, tables, pos)
+
+    def qdecode(self, q, k_i8, k_s, v_i8, v_s, bias):
+        # KC007: delegates to a DIFFERENT primitive
+        return self.inner.paged_decode(q, k_i8, k_s, v_i8, v_s)
+
+    def qmatmul_static(self, x, w_i8, w_s):
+        # KC007: silently drops a declared positional
+        return self.inner.qmatmul_static(x, w_i8)
+
+    def qmatmul_dynamic(self, x, w):
+        return self.inner.qmatmul_dynamic(x, w)
+
+    def quantize_weights(self, w):
+        return self.inner.quantize_weights(w)

@@ -29,7 +29,8 @@ EXPECTED = {
     "kc_int8.py": {"KC201": 2},
     "kc_int4.py": {"KC201": 3},
     "kernel_contract/api/backends.py": {
-        "KC001": 1, "KC002": 1, "KC003": 1, "KC004": 1, "KC005": 1},
+        "KC001": 1, "KC002": 1, "KC003": 1, "KC004": 1, "KC005": 1,
+        "KC007": 2},
     "kernel_contract/kernels/ref.py": {},       # supporting file: clean
 }
 
@@ -114,7 +115,7 @@ def test_baseline_roundtrip_and_gating(tmp_path):
     assert analysis_main([FIXTURES, "--baseline", baseline,
                           "--update-baseline"]) == 0
     entries = load_baseline(baseline)
-    assert len(entries) == 28
+    assert len(entries) == 30
     # with everything grandfathered the same scan passes
     assert analysis_main([FIXTURES, "--baseline", baseline]) == 0
     # dropping one entry resurfaces exactly that finding
@@ -158,6 +159,10 @@ def test_json_artifact_and_coverage(tmp_path):
     assert "flash_prefill_ref" in cov["flash_prefill"]["ref_oracles"]
     assert cov["flash_prefill"]["parity_test"] == "tests/test_flash_prefill.py"
     assert "paged_qdecode_ref" in cov["paged_attn"]["ref_oracles"]
+    # the tensor-parallel twins register as delegating backends: KC007
+    # keeps their forwarding honest, the inner dispatch carries semantics
+    assert "TPBackend" in cov["paged_attn"]["delegating_backends"]
+    assert "TPBackend" in cov["qmatmul"]["delegating_backends"]
     assert "paged_q4decode_ref" in cov["paged_attn"]["ref_oracles"]
     assert "flash_q4prefill_ref" in cov["flash_prefill"]["ref_oracles"]
     assert cov["qmatmul"]["parity_test"] == "tests/test_kernels.py"

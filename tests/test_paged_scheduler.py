@@ -238,10 +238,12 @@ def test_paged_metrics_schema_and_warmup_reset(setup):
     engine = _engine(params, cfg)
     m = engine.metrics()
     assert set(m) == set(METRIC_KEYS)
-    assert all(v == 0 for v in m.values())
+    # tp (shard count) is identity, not progress: 1 even on a fresh engine
+    assert m["tp"] == 1
+    assert all(v == 0 for k, v in m.items() if k != "tp")
     engine.warmup()
     m = engine.metrics()
-    assert all(v == 0 for v in m.values())     # warmup left no trace
+    assert all(v == 0 for k, v in m.items() if k != "tp")  # no warmup trace
     assert engine.kv.alloc.n_cached == 0       # warmup blocks dropped
     r = engine.submit(_prompts(cfg, n=1)[0], max_new_tokens=3)
     engine.run()
