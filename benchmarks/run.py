@@ -84,7 +84,7 @@ def main() -> None:
         #: payload sections that carry *metrics* (flattened + gated by
         #: scripts/compare_bench.py); everything else is run config
         result_keys = ("variants", "rollout", "shared_prefix", "kv_pressure",
-                       "spec_decode", "kv_precision", "sharded")
+                       "spec_decode", "kv_precision", "sharded", "router")
         for bench, payload in payloads.items():
             results = {k: payload[k] for k in result_keys if k in payload}
             config = {k: v for k, v in payload.items()

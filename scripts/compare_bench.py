@@ -25,10 +25,20 @@ metric regresses by more than ``--threshold`` (default 20%):
     kv_bytes_ratio_tp2_tp1      higher is worse  (serving, tensor-parallel:
                                                  per-shard KV bytes/request
                                                  at tp=2 vs the tp=1 value)
+    router_p99_ttft_s           higher is worse  (serving, disaggregated
+                                                 router: interactive-class
+                                                 p99 TTFT in virtual s)
+    router_tok_s                lower is worse   (serving, disaggregated
+                                                 router throughput)
 
 All other shared metrics are printed as informational deltas. Deliberately
 dependency-free and repo-import-free so CI can run it against a downloaded
 baseline artifact from any checkout.
+
+Exit codes: 0 clean, 1 gated regression past the threshold, 2 nothing
+paired at all (schema drift / empty run), 3 a gated metric exists only in
+the candidate — the baseline predates it, so the gate never saw it; commit
+a regenerated baseline instead of letting the new metric float ungated.
 """
 from __future__ import annotations
 
@@ -45,7 +55,8 @@ GATED = {"throughput_tok_s": "higher", "mean_ttft_s": "lower",
          "prefill_tok_s": "higher", "flash_speedup": "higher",
          "int8_speedup": "higher", "int4_speedup": "higher",
          "kv_bytes_ratio_int4_int8": "lower",
-         "kv_bytes_ratio_tp2_tp1": "lower"}
+         "kv_bytes_ratio_tp2_tp1": "lower",
+         "router_p99_ttft_s": "lower", "router_tok_s": "higher"}
 
 
 def flatten(node, prefix: str = "") -> Dict[str, float]:
@@ -60,13 +71,20 @@ def flatten(node, prefix: str = "") -> Dict[str, float]:
 
 
 def compare(baseline: dict, candidate: dict, threshold: float):
-    """Returns (regressions, improvements, infos, n_gated_pairs) — report
-    lines plus how many gated metrics were actually paired. Zero pairs
-    means the reports don't overlap (renamed variants, schema drift, empty
-    results) and MUST fail the gate rather than silently pass."""
+    """Returns (regressions, improvements, infos, n_gated_pairs,
+    cand_only_gated) — report lines, how many gated metrics were actually
+    paired, and the gated paths that exist ONLY in the candidate. Zero
+    pairs means the reports don't overlap (renamed variants, schema drift,
+    empty results) and MUST fail the gate rather than silently pass; a
+    candidate-only gated path means the baseline predates the metric, so
+    intersecting the key sets would quietly exempt it from gating forever
+    (the bug this return value fixes) — the caller fails it loudly."""
     base = flatten(baseline.get("results", baseline))
     cand = flatten(candidate.get("results", candidate))
     regressions, improvements, infos = [], [], []
+    cand_only_gated = sorted(
+        path for path in set(cand) - set(base)
+        if path.rsplit(".", 1)[-1] in GATED)
     n_gated = 0
     for path in sorted(set(base) & set(cand)):
         old, new = base[path], cand[path]
@@ -86,7 +104,7 @@ def compare(baseline: dict, candidate: dict, threshold: float):
             improvements.append(line)
         else:
             infos.append(line)
-    return regressions, improvements, infos, n_gated
+    return regressions, improvements, infos, n_gated, cand_only_gated
 
 
 def main() -> int:
@@ -100,13 +118,20 @@ def main() -> int:
         baseline = json.load(f)
     with open(args.candidate) as f:
         candidate = json.load(f)
-    regressions, improvements, infos, n_gated = compare(baseline, candidate,
-                                                        args.threshold)
+    (regressions, improvements, infos, n_gated,
+     cand_only_gated) = compare(baseline, candidate, args.threshold)
     if n_gated == 0:
         print(f"ERROR: no gated metric ({' / '.join(sorted(GATED))}) "
               "exists at a shared path in both reports — nothing was "
               "compared. Schema drift or an empty benchmark run.")
         return 2
+    if cand_only_gated:
+        print("ERROR: gated metric(s) present only in the candidate — the "
+              "baseline predates them, so they would never be gated:")
+        for path in cand_only_gated:
+            print(f"  {path}")
+        print("Regenerate and commit the baseline report.")
+        return 3
     if infos:
         print("within threshold:")
         print("\n".join(infos))

@@ -117,12 +117,85 @@ class EnginePool:
             self._engines[key] = eng
         return eng
 
+    def request_router(self, ref, backend: Optional[str] = None,
+                       profile: Optional[DeviceProfile] = None, *,
+                       kv_fraction: Optional[float] = None,
+                       n_prefill: int = 1, n_decode: int = 2,
+                       slots_per_worker: int = 2, max_len: int = 128,
+                       block_size: int = 16, prefill_chunk: int = 8,
+                       router_config=None):
+        """Disaggregated serving for one device class: ``n_prefill``
+        prefill workers + ``n_decode`` decode workers on ONE
+        ``SharedKVPool`` sized from the profile's KV budget, fronted by an
+        SLO-aware ``ServingRouter``. Cached per class like
+        ``serving_engine`` — a site's worth of gateways shares one router.
+
+        The budget buys the *pool*, not per-engine caches: role-splitting
+        reuses the same blocks a combined engine would hold, it just stops
+        long prompts from pinning decode slots."""
+        from repro.serving.kvcache import SharedKVPool, blocks_for_budget
+        from repro.serving.router import ServingRouter
+        from repro.serving.scheduler import ContinuousBatchingEngine
+
+        budget = (self.kv_budget_bytes(profile, kv_fraction)
+                  if profile is not None else None)
+        key = ("router", ref.key, backend, profile.name if profile else None,
+               budget, n_prefill, n_decode, slots_per_worker, max_len,
+               block_size, prefill_chunk)
+        router = self._engines.get(key)
+        if router is None:
+            art = self.artifact(ref)
+            cfg = art.config
+            total_slots = (n_prefill + n_decode) * slots_per_worker
+            n_blocks = (blocks_for_budget(cfg, block_size, budget)
+                        if budget is not None
+                        else total_slots * (-(-max_len // block_size)) + 1)
+            store = SharedKVPool(cfg, n_blocks, block_size)
+
+            def worker(chunk):
+                return ContinuousBatchingEngine(
+                    art, backend=backend, n_slots=slots_per_worker,
+                    max_len=max_len, paged=True, shared_kv=store,
+                    prefill_chunk=chunk,
+                    max_queue_depth=2 * slots_per_worker)
+
+            router = ServingRouter(
+                [worker(prefill_chunk) for _ in range(n_prefill)],
+                [worker(0) for _ in range(n_decode)],
+                config=router_config)
+            self._engines[key] = router
+        return router
+
     def memory_report(self) -> Dict[str, Dict[str, Any]]:
         """Per-engine KV accounting: pool capacity, bytes/block, peak
         blocks touched — the fleet-side view of cache memory pressure."""
         out: Dict[str, Dict[str, Any]] = {}
-        for (akey, backend, pname, budget, n_slots, max_len,
-             block_size, tp), eng in self._engines.items():
+        for key, eng in self._engines.items():
+            if key[0] == "router":
+                (_, akey, backend, pname, budget, n_prefill, n_decode,
+                 spw, max_len, block_size, _) = key
+                alloc = eng.store.alloc
+                bpb = eng.decode[0].kv.bytes_per_block
+                out[f"{akey}@{backend or 'default'}"
+                    f"/{pname or 'unbounded'}/{budget or 'full'}b"
+                    f"/router{n_prefill}p{n_decode}d"
+                    f"x{spw}/{max_len}/bs{block_size}"] = {
+                    "budget_bytes": budget,
+                    "router": f"{n_prefill}p+{n_decode}d",
+                    "n_blocks": alloc.usable_blocks,
+                    "bytes_per_block": bpb,
+                    "kv_capacity_bytes": bpb * alloc.usable_blocks,
+                    "kv_blocks_peak": alloc.stats.peak_in_use,
+                    "kv_peak_bytes": bpb * alloc.stats.peak_in_use,
+                    "preempted": sum(e.preempted_total
+                                     for e in eng.prefill + eng.decode),
+                    "prefix_hit_tokens": sum(
+                        e.prefix_hit_tokens
+                        for e in eng.prefill + eng.decode),
+                }
+                continue
+            (akey, backend, pname, budget, n_slots, max_len,
+             block_size, tp) = key
             kv = eng.kv
             # key mirrors the full cache key: engines differing only in
             # budget/geometry must not overwrite each other in the report

@@ -1,9 +1,12 @@
 from repro.serving.engine import InferenceSession, Pipeline, Request, RequestQueue
-from repro.serving.kvcache import (BlockAllocator, PagedKVCache,
-                                   blocks_for_budget, hash_prompt_blocks,
-                                   kv_bytes_per_block, paged_supported,
-                                   pow2_bucket)
+from repro.serving.kvcache import (BlockAllocator, KVHandoff, PagedKVCache,
+                                   SharedKVPool, blocks_for_budget,
+                                   hash_prompt_blocks, kv_bytes_per_block,
+                                   paged_supported, pow2_bucket)
 from repro.serving.loadgen import ArrivalTrace, TracedRequest, replay
+from repro.serving.router import (BATCH, INTERACTIVE, RouterConfig,
+                                  RoutedRequest, ServingRouter, SLOClass,
+                                  route_trace, single_engine_trace)
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.spec_decode import SpecConfig, spec_supported
 from repro.serving.scheduler import METRIC_KEYS, ContinuousBatchingEngine, GenRequest

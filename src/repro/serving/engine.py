@@ -26,9 +26,14 @@ def interpolated_percentile(xs: Sequence[float], p: float) -> float:
     ``repro.fleet.telemetry``. ``xs`` need not be sorted.
 
     The previous nearest-rank ``xs[int(len(xs) * p)]`` biased high on small
-    samples (e.g. p50 of two samples returned the max)."""
+    samples (e.g. p50 of two samples returned the max). ``p`` is clamped to
+    [0, 1]: an out-of-range quantile used to *extrapolate* past the sample
+    min/max (p=-0.1 over [1, 3] returned 0.8), which is never a percentile
+    of the window — empty windows still return 0.0 so zero-completed
+    metrics stay finite for the BENCH JSON pipeline."""
     if not xs:
         return 0.0
+    p = min(max(p, 0.0), 1.0)
     s = sorted(xs)
     if len(s) == 1:
         return s[0]

@@ -322,6 +322,77 @@ def init_paged_pools(cfg: ModelConfig, n_blocks: int,
     return pools
 
 
+def kv_pool_signature(cfg: ModelConfig, n_blocks: int,
+                      block_size: int) -> Tuple:
+    """Geometry + precision fingerprint of a block pool. Two engines may
+    share one ``SharedKVPool`` only when their configs produce identical
+    signatures — block ids are raw indices into the pool leaves, so any
+    shape or dtype mismatch would read garbage, not raise."""
+    return (cfg.attention, cfg.n_layers, cfg.n_dense_layers if cfg.n_experts
+            else 0, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.kv_lora_rank,
+            cfg.qk_rope_dim, cfg.kv_precision, str(cfg.activation_dtype),
+            n_blocks, block_size)
+
+
+class SharedKVPool:
+    """One allocator + one set of device pools shared by several engines.
+
+    Disaggregated prefill/decode serving needs the *same* physical blocks
+    visible from every engine: a prefill worker scatters a prompt's KV into
+    pool blocks and a decode worker's block table then points at those ids
+    with zero recompute. Each ``PagedKVCache`` built with ``shared=`` keeps
+    its own slots/tables but delegates ``alloc`` and ``pools`` here, so the
+    functional pool updates every engine performs (``kv.pools = new``)
+    land in one place and are immediately visible to its peers.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int, *,
+                 shards: int = 1, pool_sharding=None):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.shards = max(int(shards), 1)
+        self.signature = kv_pool_signature(cfg, n_blocks, block_size)
+        self.alloc = BlockAllocator(n_blocks, block_size)
+        pools = init_paged_pools(cfg, n_blocks, block_size)
+        self.pools = pools if pool_sharding is None else pool_sharding(pools)
+
+    def reset(self) -> None:
+        """Drop all allocator state. Only safe when every attached engine is
+        idle — callers (router warmup) must release all slots first."""
+        self.alloc.reset()
+
+
+@dataclasses.dataclass
+class KVHandoff:
+    """Ownership token for a prompt's KV blocks, produced by a prefill
+    worker and consumed by a decode worker sharing the same pool.
+
+    The prefill engine retains every block before releasing its slot, so
+    the blocks stay live (refcount >= 1) with the handoff as their owner.
+    Full prompt blocks are also hash-registered, so even if the handoff is
+    dropped the work survives as reusable prefix cache. Exactly one of
+    ``consume``/``release`` must eventually run: ``consume`` transfers the
+    refcounts into a decode slot's table, ``release`` drops them.
+    """
+
+    tokens: Any                      # [1, S] prompt (device or list)
+    first_token: int                 # the one token the prefill step sampled
+    block_ids: Tuple[int, ...]       # pool blocks, prompt order
+    cache_pos: int                   # materialized positions (== prompt len)
+    block_hashes: Tuple[int, ...]    # chained hashes of the full blocks
+    consumed: bool = False
+
+    def release(self, alloc: BlockAllocator) -> None:
+        """Drop the handoff's ownership (request cancelled / rejected for
+        good). Registered blocks fall back to the cached-LRU prefix tier;
+        the partial tail block returns to the free list."""
+        if self.consumed:
+            return
+        self.consumed = True
+        for bid in self.block_ids:
+            alloc.free(bid)
+
+
 @jax.jit
 def _scatter_leaf(pool, dense, ids):
     """pool [L,N,bs,...] <- dense [L,1,M*bs,...] at block ids [M]."""
@@ -346,28 +417,47 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, n_slots: int, n_blocks: int,
                  block_size: int, max_blocks_per_seq: int, *,
-                 shards: int = 1, pool_sharding=None):
+                 shards: int = 1, pool_sharding=None,
+                 shared: Optional[SharedKVPool] = None):
         self.cfg = cfg
         self.n_slots = n_slots
-        self.block_size = block_size
         self.max_blocks = max_blocks_per_seq
         # tensor-parallel serving: each of ``shards`` devices holds its
         # kv-head slice of every pool leaf. Block tables, the allocator,
         # and slot bookkeeping stay host-side and replicated — sharding
         # never changes block identity, only where a block's payload lives.
-        self.shards = max(int(shards), 1)
-        self._pool_sharding = pool_sharding
-        self.alloc = BlockAllocator(n_blocks, block_size)
-        self.pools = self._place(init_paged_pools(cfg, n_blocks, block_size))
+        if shared is not None:
+            sig = kv_pool_signature(cfg, shared.alloc.n_blocks,
+                                    shared.block_size)
+            if sig != shared.signature:
+                raise ValueError(
+                    "engine config incompatible with the shared KV pool: "
+                    f"{sig} != {shared.signature}")
+            self.store = shared
+            self.owns_store = False
+        else:
+            self.store = SharedKVPool(cfg, n_blocks, block_size,
+                                      shards=shards,
+                                      pool_sharding=pool_sharding)
+            self.owns_store = True
+        self.block_size = self.store.block_size
+        self.shards = self.store.shards
+        self.alloc = self.store.alloc
         self.slot_blocks: List[List[int]] = [[] for _ in range(n_slots)]
         self._tables: Optional[jax.Array] = None
         if self.bytes_per_block * self.alloc.usable_blocks <= 0:
             raise ValueError("empty paged pool")
 
-    def _place(self, pools):
-        if self._pool_sharding is None:
-            return pools
-        return self._pool_sharding(pools)
+    # ------------------------------------------------------------- #
+    @property
+    def pools(self):
+        """Device pools live on the (possibly shared) store so a functional
+        update through any attached engine is visible to all of them."""
+        return self.store.pools
+
+    @pools.setter
+    def pools(self, new) -> None:
+        self.store.pools = new
 
     # ------------------------------------------------------------- #
     @property
@@ -496,8 +586,34 @@ class PagedKVCache:
             self.attach(slot, bid)
         return ids
 
+    # ------------------------------------------------------------- #
+    def export_blocks(self, slot: int) -> Tuple[int, ...]:
+        """Retain and return ``slot``'s blocks for handoff. Ownership of one
+        reference per block moves to the caller; the slot keeps its own
+        references until ``release_slot`` drops them."""
+        ids = tuple(self.slot_blocks[slot])
+        for bid in ids:
+            self.alloc.retain(bid)
+        return ids
+
+    def import_blocks(self, slot: int, ids: Sequence[int]) -> None:
+        """Attach exported blocks to an (empty) slot's table. The caller's
+        references transfer to the table — no refcount change."""
+        assert not self.slot_blocks[slot], f"slot {slot} not empty"
+        for bid in ids:
+            assert self.alloc.refcount(bid) >= 1, f"import of freed block {bid}"
+            self.attach(slot, bid)
+
     def reset(self) -> None:
-        self.alloc.reset()
+        """Engine warmup / teardown. An engine attached to a shared store
+        only drops its own slots — resetting the shared allocator out from
+        under peer engines would corrupt their tables (the router resets the
+        store once, after quiescing every engine)."""
+        if self.owns_store:
+            self.alloc.reset()
+        else:
+            for slot in range(self.n_slots):
+                self.release_slot(slot)
         self.slot_blocks = [[] for _ in range(self.n_slots)]
         self._dirty()
 

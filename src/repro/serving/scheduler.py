@@ -82,9 +82,9 @@ from repro.models import (decode_step, decode_step_paged, init_cache, prefill,
                           prefill_paged, verify_step, verify_step_paged)
 from repro.models.config import ModelConfig
 from repro.serving.engine import interpolated_percentile
-from repro.serving.kvcache import (PagedKVCache, bucketed_prefill_ok,
-                                   hash_prompt_blocks, paged_supported,
-                                   pow2_bucket)
+from repro.serving.kvcache import (KVHandoff, PagedKVCache, SharedKVPool,
+                                   bucketed_prefill_ok, hash_prompt_blocks,
+                                   paged_supported, pow2_bucket)
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.spec_decode import (SpecConfig, draft_propose,
                                        greedy_accept, rejection_sample,
@@ -95,10 +95,11 @@ from repro.serving.spec_decode import (SpecConfig, draft_propose,
 METRIC_KEYS = (
     "completed", "rejected", "queued", "active", "submitted",
     "decode_steps", "generated_tokens", "prefill_tokens",
-    "mean_ttft_s", "p50_ttft_s", "p90_ttft_s",
+    "mean_ttft_s", "p50_ttft_s", "p90_ttft_s", "p99_ttft_s",
     "mean_latency_s", "throughput_tok_s",
     # KV-cache v2 (zero for dense engines unless noted)
     "preempted",                 # requests evicted back to the queue
+    "cancelled",                 # requests withdrawn via cancel()
     "prefix_hit_tokens",         # prompt tokens served from cached blocks
     "prefix_hit_rate",           # hit tokens / submitted prompt tokens
     "prompt_tokens_computed",    # prompt tokens actually recomputed
@@ -143,8 +144,12 @@ class GenRequest:
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     priority: int = 0
     on_token: Optional[Callable[["GenRequest", Any], None]] = None
-    status: str = "queued"             # queued|rejected|prefill|decode|done
+    status: str = "queued"   # queued|rejected|cancelled|prefill|decode|done
     n_consumed: int = 0                # prompt tokens already in the cache
+    # disaggregated serving (paged engines sharing a SharedKVPool)
+    capture_kv: bool = False           # prefill worker: export blocks on done
+    kv_handoff: Optional[KVHandoff] = None      # the exported handoff
+    _handoff: Optional[KVHandoff] = None        # incoming handoff to consume
     # KV-cache v2 fields (paged engines)
     prefix_hit: int = 0                # prompt tokens attached from cache
     preemptions: int = 0
@@ -216,6 +221,7 @@ class ContinuousBatchingEngine:
                  kv_budget_bytes: Optional[int] = None,
                  spec: Optional[SpecConfig] = None,
                  tp: int = 1, tp_combine: str = "exact",
+                 shared_kv: Optional[SharedKVPool] = None,
                  config: Optional["EngineConfig"] = None):
         # local import: repro.api pulls the fleet stack which imports
         # serving — resolve lazily to stay acyclic (same as engine.py)
@@ -302,15 +308,28 @@ class ContinuousBatchingEngine:
         self.rejected_total = 0
         self.prefill_tokens = 0        # prompt tokens processed by prefill
         self.preempted_total = 0
+        self.cancelled_total = 0
         self.prefix_hit_tokens = 0
         self.prompt_tokens_computed = 0
         self.prompt_tokens_submitted = 0
+        if shared_kv is not None and not paged:
+            raise ValueError("shared_kv requires paged=True")
         if paged:
             why = paged_supported(cfg)
             if why is not None:
                 raise ValueError(
                     f"paged=True unsupported for {cfg.name}: {why} "
                     "(use the dense compat path)")
+            if shared_kv is not None:
+                # disaggregated serving: this engine attaches to a pool some
+                # peer engine also serves from — block ids are shared, so
+                # geometry comes from the store, not the local arguments
+                if shared_kv.shards != self.tp:
+                    raise ValueError(
+                        f"shared pool built for shards={shared_kv.shards}, "
+                        f"engine has tp={self.tp}")
+                block_size = shared_kv.block_size
+                n_blocks = shared_kv.alloc.n_blocks
             max_blocks = -(-self._pad_len // block_size)
             if n_blocks is None:
                 if kv_budget_bytes is not None:
@@ -333,7 +352,8 @@ class ContinuousBatchingEngine:
                 cfg, n_slots, n_blocks, block_size, max_blocks,
                 shards=self.tp,
                 pool_sharding=(self._tp_ctx.shard_cache
-                               if self._tp_ctx is not None else None))
+                               if self._tp_ctx is not None else None),
+                shared=shared_kv)
             self.cache = self.kv.pools          # alias: pools ARE the cache
         else:
             self.kv = None
@@ -436,11 +456,14 @@ class ContinuousBatchingEngine:
 
     @property
     def queue_depth(self) -> int:
-        return len(self._pending)
+        # cancelled requests stay heap entries until lazily drained by
+        # _admit — they must not count against admission backpressure
+        return sum(1 for _, _, r in self._pending if r.status != "cancelled")
 
     @property
     def has_work(self) -> bool:
-        return bool(self._pending) or any(r is not None for r in self.active)
+        return (any(r.status != "cancelled" for _, _, r in self._pending)
+                or any(r is not None for r in self.active))
 
     def warmup(self, prompt_len: int = 0, max_new_tokens: int = 2) -> None:
         """Trace + compile the prefill/decode entry points with a throwaway
@@ -459,6 +482,7 @@ class ContinuousBatchingEngine:
         self.prefill_tokens = 0
         self.rejected_total = 0
         self.preempted_total = 0
+        self.cancelled_total = 0
         self.prefix_hit_tokens = 0
         self.prompt_tokens_computed = 0
         self.prompt_tokens_submitted = 0
@@ -509,10 +533,114 @@ class ContinuousBatchingEngine:
         return req
 
     # ---------------------------------------------------------------- #
+    # Disaggregated serving entry points (paged engines on a SharedKVPool)
+    # ---------------------------------------------------------------- #
+    def submit_prefill(self, tokens, sampling: Optional[SamplingParams] = None,
+                       priority: int = 0,
+                       on_token: Optional[Callable] = None) -> GenRequest:
+        """Queue a prompt on a dedicated *prefill worker*: the engine
+        computes the prompt's paged KV plus exactly one generated token,
+        then — instead of dropping the blocks at release — exports them as
+        ``req.kv_handoff`` for a decode worker sharing the same pool.
+        Every full prompt block is also hash-registered, so the computed
+        prefix survives as cache even if the handoff is never consumed."""
+        if not self.paged:
+            raise ValueError("submit_prefill requires a paged engine")
+        if self.spec is not None:
+            raise ValueError("prefill workers do not run speculative decode")
+        if self.cfg.n_frontend_tokens:
+            raise ValueError("frontend-token archs cannot hash prompt blocks")
+        req = self.submit(tokens, max_new_tokens=1, eos_id=-1,
+                          sampling=sampling, priority=priority,
+                          on_token=on_token)
+        if not req.rejected:
+            req.capture_kv = True
+        return req
+
+    def submit_handoff(self, handoff: KVHandoff, max_new_tokens: int = 16,
+                       eos_id: Union[int, Sequence[int]] = -1,
+                       sampling: Optional[SamplingParams] = None,
+                       priority: int = 0,
+                       on_token: Optional[Callable] = None) -> GenRequest:
+        """Queue a prefilled request on a *decode worker*: ``handoff`` came
+        from a peer engine's ``submit_prefill`` on the same ``SharedKVPool``,
+        so the prompt's KV blocks attach to a slot with zero recompute and
+        decoding resumes from the already-sampled first token.
+
+        Ownership: an ACCEPTED request takes the handoff's block references
+        (released when the request finishes or is cancelled). A REJECTED
+        submission leaves ownership with the caller — the router re-
+        dispatches the same handoff to another worker or releases it."""
+        if not self.paged:
+            raise ValueError("submit_handoff requires a paged engine")
+        if handoff.consumed:
+            raise ValueError("handoff already consumed or released")
+        req = GenRequest(self._next_rid, handoff.tokens, max_new_tokens,
+                         None, eos_id, out_tokens=[],
+                         # repro: allow-wallclock -- TTFT/e2e gates measure real compute
+                         submitted_at=time.perf_counter(),
+                         sampling=sampling or SamplingParams(),
+                         priority=priority, on_token=on_token)
+        self._next_rid += 1
+        self.all_requests.append(req)
+        if self.max_queue_depth and self.queue_depth >= self.max_queue_depth:
+            req.status = "rejected"
+            self.rejected_total += 1
+            return req
+        total = req.prompt_len + max_new_tokens
+        if (total > self.max_len
+                or self.kv.blocks_for_tokens(total) + 1
+                > self.kv.alloc.usable_blocks
+                # KV pressure: the shared pool cannot supply even one block
+                # of decode headroom right now — reject instead of queueing
+                # work this worker cannot start (the router re-dispatches)
+                or self.kv.alloc.available() < 1):
+            req.status = "rejected"
+            self.rejected_total += 1
+            return req
+        self.prompt_tokens_submitted += req.prompt_len
+        req._handoff = handoff
+        # the prefill worker already sampled the first token: record it so
+        # streaming callbacks and EOS/budget checks see it exactly once
+        req.status = "queued"
+        self._record(req, handoff.first_token)
+        if req.done:
+            # max_new_tokens == 1 or the first token IS the EOS: nothing
+            # left to decode — consume the handoff without taking a slot
+            req._handoff = None
+            handoff.release(self.kv.alloc)
+            return req
+        heapq.heappush(self._pending, (-priority, req.rid, req))
+        return req
+
+    def cancel(self, req: GenRequest) -> bool:
+        """Withdraw an unfinished request. Queued entries are marked and
+        lazily dropped from the heap; active ones release their slot (and
+        blocks, in paged mode). A queued handoff request must also release
+        the handoff blocks the engine took ownership of at submit — leaving
+        them retained would leak pool blocks on every router-side timeout
+        (the refcount-conservation property test pins this)."""
+        if req.done or req.status in ("rejected", "cancelled"):
+            return False
+        if req._handoff is not None:
+            req._handoff.release(self.kv.alloc)
+            req._handoff = None
+        req.status = "cancelled"
+        slot = next((i for i, r in enumerate(self.active) if r is req), None)
+        if slot is not None:
+            self._release(slot)      # capture_kv guard: req.done is False
+        self.cancelled_total += 1
+        return True
+
+    # ---------------------------------------------------------------- #
     def _admit(self) -> None:
         """Prefill the first chunk of pending requests into free slots."""
         for slot in range(self.n_slots):
-            if self.active[slot] is not None or not self._pending:
+            if self.active[slot] is not None:
+                continue
+            while self._pending and self._pending[0][2].status == "cancelled":
+                heapq.heappop(self._pending)     # lazily drop cancellations
+            if not self._pending:
                 continue
             if self.paged:
                 if not self._admit_paged(slot):
@@ -593,6 +721,8 @@ class ContinuousBatchingEngine:
         bs = kv.block_size
         nf = self.cfg.n_frontend_tokens
         req = self._pending[0][2]
+        if req._handoff is not None:
+            return self._admit_handoff(slot, req)
         tokens = req.feed_tokens
         s = tokens.shape[1]
         hashing = req.frontend_embeds is None and nf == 0
@@ -682,10 +812,63 @@ class ContinuousBatchingEngine:
             self._set_last(slot, self._prompt_token(req, req.n_consumed))
         return True
 
+    def _admit_handoff(self, slot: int, req: GenRequest) -> bool:
+        """Resume-style admission of a prefilled handoff: attach the peer
+        engine's blocks to this slot's table (the handoff's references
+        transfer — no recompute, no refcount change) and decode from the
+        first token the prefill worker sampled. Requires one available
+        block of decode headroom so the very next ``_ensure_blocks`` cannot
+        immediately preempt the request we just admitted."""
+        kv = self.kv
+        if kv.alloc.available() < 1:
+            return False
+        heapq.heappop(self._pending)
+        h = req._handoff
+        req._handoff = None
+        # ownership was taken at submit; a handoff consumed while queued
+        # means a caller double-submitted it — corrupt refcounts ahead
+        assert not h.consumed, "handoff consumed while queued"
+        h.consumed = True
+        kv.import_blocks(slot, h.block_ids)
+        self.positions = self.positions.at[slot].set(h.cache_pos)
+        req.cache_pos = h.cache_pos
+        req.n_consumed = req.prompt_len
+        req.prefix_hit += h.cache_pos        # served from the pool, not
+        self.prefix_hit_tokens += h.cache_pos  # recomputed by this engine
+        self.active[slot] = req
+        if self.spec is not None:
+            self._admit_draft(slot, req)
+        req.status = "decode"
+        self._set_last(slot, h.first_token)
+        return True
+
+    def _capture_handoff(self, slot: int, req: GenRequest) -> KVHandoff:
+        """Export a finished prefill request's blocks for decode handoff.
+        Registers every FULL prompt block under the prompt's hash chain
+        (the cold prefill path registered only the pre-tail chain; the last
+        full block may have been filled by decode-tail ticks), then retains
+        each block so they all survive this slot's release."""
+        kv = self.kv
+        toks = req.tokens[0].tolist()
+        hashes = (req._block_hashes
+                  if req._block_hashes is not None
+                  else hash_prompt_blocks(toks, kv.block_size))
+        for i, h in enumerate(hashes):
+            kv.alloc.register(kv.slot_blocks[slot][i], h)
+        return KVHandoff(tokens=req.tokens,
+                         first_token=req.out_tokens[0],
+                         block_ids=kv.export_blocks(slot),
+                         cache_pos=req.cache_pos,
+                         block_hashes=tuple(hashes))
+
     def _release(self, slot: int) -> None:
         """Free a slot whose request just finished (blocks drop in paged
         mode). Admission must call this too: a done request left in
         ``active`` would be stepped again and emit a bogus extra token."""
+        req = self.active[slot]
+        if (req is not None and req.capture_kv and req.done and self.paged
+                and req.kv_handoff is None):
+            req.kv_handoff = self._capture_handoff(slot, req)
         self.active[slot] = None
         self.positions = self.positions.at[slot].set(0)
         if self.paged:
@@ -1065,6 +1248,7 @@ class ContinuousBatchingEngine:
             generated_tokens=sum(len(r.out_tokens or []) for r in reqs),
             prefill_tokens=self.prefill_tokens,
             preempted=self.preempted_total,
+            cancelled=sum(1 for r in reqs if r.status == "cancelled"),
             prefix_hit_tokens=self.prefix_hit_tokens,
             prompt_tokens_computed=self.prompt_tokens_computed,
             prefix_hit_rate=(self.prefix_hit_tokens
@@ -1108,6 +1292,7 @@ class ContinuousBatchingEngine:
             mean_ttft_s=sum(ttft) / len(ttft),
             p50_ttft_s=interpolated_percentile(ttft, 0.5),
             p90_ttft_s=interpolated_percentile(ttft, 0.9),
+            p99_ttft_s=interpolated_percentile(ttft, 0.99),
             mean_latency_s=sum(total) / len(total),
             throughput_tok_s=toks / max(wall, 1e-9),
         )

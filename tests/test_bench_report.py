@@ -58,8 +58,9 @@ def test_compare_gating(metric, old, new, fails):
     cb = _load_compare_bench()
     base = make_report("serving", {"variants": {"v": {metric: old}}})
     cand = make_report("serving", {"variants": {"v": {metric: new}}})
-    regressions, _, _, n_gated = cb.compare(base, cand, threshold=0.20)
-    assert n_gated == 1
+    regressions, _, _, n_gated, cand_only = cb.compare(base, cand,
+                                                       threshold=0.20)
+    assert n_gated == 1 and cand_only == []
     assert bool(regressions) == fails
 
 
@@ -71,9 +72,57 @@ def test_compare_fails_loudly_when_nothing_pairs():
                        {"variants": {"old_name": {"throughput_tok_s": 10.0}}})
     cand = make_report("serving",
                        {"variants": {"new_name": {"throughput_tok_s": 10.0}}})
-    regressions, improvements, infos, n_gated = cb.compare(base, cand, 0.2)
+    regressions, improvements, infos, n_gated, cand_only = cb.compare(
+        base, cand, 0.2)
     assert n_gated == 0 and not regressions
+    # the renamed variant's gated metric shows up as candidate-only
+    assert cand_only == ["variants.new_name.throughput_tok_s"]
     # ungated metrics never pair either
     base = make_report("serving", {"variants": {"v": {"decode_steps": 10}}})
     cand = make_report("serving", {"variants": {"v": {"decode_steps": 99}}})
-    assert cb.compare(base, cand, 0.2) == ([], [], [], 0)
+    assert cb.compare(base, cand, 0.2) == ([], [], [], 0, [])
+
+
+def test_compare_flags_candidate_only_gated_metrics():
+    """A gated metric added to the bench BEFORE its baseline is regenerated
+    used to vanish from the comparison (paths were intersected), so the new
+    metric was never gated and could regress freely. compare() now surfaces
+    those paths and main() turns them into a distinct exit code."""
+    cb = _load_compare_bench()
+    shared = {"variants": {"v": {"throughput_tok_s": 10.0}}}
+    base = make_report("serving", shared)
+    cand = make_report("serving", {**shared,
+                                   "router": {"router_p99_ttft_s": 20.0,
+                                              "router_tok_s": 4.0,
+                                              "n_requests": 200}})
+    regressions, _, _, n_gated, cand_only = cb.compare(base, cand, 0.2)
+    assert n_gated == 1 and not regressions
+    assert cand_only == ["router.router_p99_ttft_s", "router.router_tok_s"]
+    # ungated candidate-only leaves (n_requests) are NOT flagged
+    assert all(p.rsplit(".", 1)[-1] in cb.GATED for p in cand_only)
+    # baseline-only gated paths don't trip it (a removed section is visible
+    # in review; the silent failure mode is candidate-only)
+    assert cb.compare(cand, cand, 0.2)[4] == []
+
+
+def test_compare_main_exit_codes(tmp_path, monkeypatch, capsys):
+    """main() exit paths: 0 clean, 1 regression, 2 nothing paired, 3
+    candidate-only gated metric."""
+    cb = _load_compare_bench()
+
+    def run(base_results, cand_results):
+        b = tmp_path / "base.json"
+        c = tmp_path / "cand.json"
+        b.write_text(json.dumps(make_report("serving", base_results)))
+        c.write_text(json.dumps(make_report("serving", cand_results)))
+        monkeypatch.setattr(sys, "argv",
+                            ["compare_bench.py", str(b), str(c)])
+        return cb.main()
+
+    ok = {"variants": {"v": {"throughput_tok_s": 10.0}}}
+    assert run(ok, ok) == 0
+    assert run(ok, {"variants": {"v": {"throughput_tok_s": 1.0}}}) == 1
+    assert run(ok, {"variants": {"v": {"decode_steps": 3}}}) == 2
+    assert run(ok, {"variants": {"v": {"throughput_tok_s": 10.0,
+                                       "router_tok_s": 4.0}}}) == 3
+    assert "only in the candidate" in capsys.readouterr().out
